@@ -1,0 +1,64 @@
+"""Technique ablation + tile sweep — paper Fig. 12 & Fig. 13 / §5.5.
+
+Applies Vec-LUT's techniques one at a time on the same mpGeMM:
+  layout   : token-contiguous vs feature-contiguous (§3.3, the up-to-12× one)
+  stream   : streamed precompute-lookup vs whole-table (§3.4)
+  accum    : hierarchical INT16→INT32 vs direct INT32 (§3.4)
+  topo     : topological vs naive precompute op-count (§4)
+and sweeps N_tile / K_tile (§4 tile-size selection)."""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack_weight, ternary_quantize, vlut_gemm
+from .common import emit, time_fn
+
+
+def run(quick: bool = True):
+    m, k, n = (320, 3200, 64) if quick else (1024, 4096, 128)
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((m, k)).astype(np.float32)
+    tw = ternary_quantize(jnp.asarray(w))
+    pw = pack_weight(tw.values, tw.scale, "i1")
+    a = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+
+    steps = [
+        ("feature_first_whole_naive",
+         dict(token_contiguous=False, streamed=False, hierarchical=False,
+              precompute="naive")),
+        ("+token_layout",
+         dict(token_contiguous=True, streamed=False, hierarchical=False,
+              precompute="naive")),
+        ("+hierarchical_accum",
+         dict(token_contiguous=True, streamed=False, hierarchical=True,
+              precompute="naive")),
+        ("+streamed",
+         dict(token_contiguous=True, streamed=True, hierarchical=True,
+              precompute="naive")),
+        ("+topological(matmul)",
+         dict(token_contiguous=True, streamed=True, hierarchical=True,
+              precompute="matmul")),
+    ]
+    base = None
+    for name, kw in steps:
+        fn = functools.partial(vlut_gemm, pw, **kw)
+        s = time_fn(fn, a, warmup=1, repeats=3)
+        base = base or s
+        emit(f"ablation/{m}x{k}xN{n}/{name}", s, f"{base / s:.2f}x vs start")
+
+    # Fig 13: N-tile sweep (0 = untiled)
+    for n_tile in (0, 8, 16, 32):
+        fn = functools.partial(vlut_gemm, pw, n_tile=n_tile)
+        s = time_fn(fn, a, warmup=1, repeats=3)
+        emit(f"tile_sweep/{m}x{k}xN{n}/n_tile{n_tile}", s, f"{1.0 / s:.1f} runs/s")
+    for kt in (4, 16, 64):
+        fn = functools.partial(vlut_gemm, pw, k_tile_groups=kt)
+        s = time_fn(fn, a, warmup=1, repeats=3)
+        emit(f"tile_sweep/{m}x{k}xN{n}/k_tile{kt}", s, f"{1.0 / s:.1f} runs/s")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,66 @@
+"""Kernel-stage time breakdown — paper Tables 1 & 5.
+
+Times the four stages of the Vec-LUT pipeline separately (activation quant,
+LUT precompute, lookup+accumulate, dequant/scale) and reports each as % of
+total — the paper's diagnosis that vector LUT collapses "Lookup" to <1% and
+shifts cost into contiguous accumulation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    lookup_accumulate,
+    pack_ternary,
+    precompute_lut,
+    ternary_quantize,
+)
+from .common import emit, time_fn
+
+
+def run(quick: bool = True):
+    m, k, n, g = (320, 3200, 64, 5) if quick else (1024, 4096, 128, 5)
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((m, k)).astype(np.float32)
+    tw = ternary_quantize(jnp.asarray(w))
+    packed = pack_ternary(tw.values, g)
+    a = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+
+    @jax.jit
+    def stage_quant(a):
+        amax = jnp.max(jnp.abs(a), axis=0)
+        sc = jnp.maximum(amax, 1e-6) / 127.0
+        return jnp.clip(jnp.round(a / sc[None, :]), -127, 127).astype(jnp.int8), sc
+
+    a_q, a_scale = stage_quant(a)
+    stage_pre = jax.jit(functools.partial(precompute_lut, g=g))
+    t = stage_pre(a_q)
+
+    @jax.jit
+    def stage_lookup(t, packed):
+        return lookup_accumulate(t, packed, hierarchical=True, g=g)
+
+    o_i = stage_lookup(t, packed)
+
+    @jax.jit
+    def stage_scale(o_i, a_scale):
+        return o_i.astype(jnp.float32) * tw.scale[:, None] * a_scale[None, :]
+
+    times = {
+        "act_quant": time_fn(stage_quant, a, warmup=1, repeats=3),
+        "precompute": time_fn(stage_pre, a_q, warmup=1, repeats=3),
+        "lookup_accum": time_fn(stage_lookup, t, packed, warmup=1, repeats=3),
+        "scale": time_fn(stage_scale, o_i, a_scale, warmup=1, repeats=3),
+    }
+    total = sum(times.values())
+    for name, s in times.items():
+        emit(f"breakdown/{m}x{k}xN{n}/{name}", s, f"{100 * s / total:.1f}%")
+    emit(f"breakdown/{m}x{k}xN{n}/total", total, "100%")
+    return times
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,31 @@
+"""Benchmark utilities: wall-clock timing of jit'd callables + CSV emission.
+
+Output contract (consumed by benchmarks.run): one CSV line per measurement,
+    name,us_per_call,derived
+where `derived` is a benchmark-specific figure of merit (runs/s, tokens/s,
+GB/s, speedup, …).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median wall seconds per call of a jit'd fn (blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

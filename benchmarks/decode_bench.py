@@ -1,0 +1,67 @@
+"""Parallel decoding + continuous batching — paper Fig. 11 / §5.3.2.
+
+(i) batched decode throughput across batch sizes (paper Fig. 11);
+(ii) a mixed continuous-batching run (prefill+decode interleaved) reporting
+     total/prefill/decode tok/s — the paper's 273.5 tok/s experiment shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import decode_step, init_cache, init_lm, pack_params, prefill
+from repro.serve import ContinuousBatchingScheduler, Engine, Request
+from .common import emit, time_fn
+
+BATCHES = [1, 4, 8, 16]
+
+
+def run(quick: bool = True):
+    cfg = get_config("smollm-360m", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    rng = np.random.default_rng(0)
+    batches = BATCHES[:3] if quick else BATCHES
+
+    # ---- Fig 11: parallel decode throughput vs batch ----------------------
+    for b in batches:
+        cache = init_cache(cfg, b, max_len=64)
+        tok = jnp.asarray(rng.integers(0, cfg.vocab, (b, 16)), jnp.int32)
+        _, cache = jax.jit(lambda p, c, t: prefill(p, t, c, cfg, mode="serve"))(
+            params, cache, tok
+        )
+        one = jnp.asarray(rng.integers(0, cfg.vocab, (b, 1)), jnp.int32)
+        fn = jax.jit(lambda p, c, t: decode_step(p, t, c, cfg, mode="serve"))
+        sec = time_fn(fn, params, cache, one, warmup=1, repeats=5)
+        emit(f"decode/batch{b}", sec, f"{b / sec:.1f} tok/s")
+
+    # ---- §5.3.2: continuous batching --------------------------------------
+    eng = Engine(params, cfg, max_slots=4, max_len=96)
+    sched = ContinuousBatchingScheduler(eng)
+    n_req = 8 if quick else 32
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, size=16).astype(np.int32),
+            max_new_tokens=16,
+        )
+        for i in range(n_req)
+    ]
+    # warmup compile with one throwaway request
+    w = ContinuousBatchingScheduler(Engine(params, cfg, max_slots=4, max_len=96))
+    w.submit([Request(rid=-1, prompt=reqs[0].prompt.copy(), max_new_tokens=2)])
+    w.run_to_completion()
+    sched.submit(reqs)
+    stats = sched.run_to_completion()
+    emit(
+        "continuous_batching/total", stats.wall_s,
+        f"{stats.throughput_tok_s:.1f} tok/s "
+        f"(prefill {stats.prefill_tok_s:.1f} decode {stats.decode_tok_s:.1f}) "
+        f"completed {stats.completed}/{n_req}",
+    )
+    return stats
+
+
+if __name__ == "__main__":
+    run(quick=False)

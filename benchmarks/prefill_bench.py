@@ -1,0 +1,49 @@
+"""End-to-end prefill throughput — paper Fig. 10 / Fig. 13.
+
+Tokens/s of the packed-ternary serve path vs the MAD-style dense path over
+prompt lengths (the paper's headline: Vec-LUT throughput scales ~linearly
+with parallel tokens, unlike scalar LUT)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_cache, init_lm, pack_params, prefill
+from .common import emit, time_fn
+
+LENS = [32, 64, 128, 256]
+
+
+def run(quick: bool = True):
+    cfg = get_config("smollm-360m", smoke=True)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    packed = pack_params(params, cfg)
+    lens = LENS[:3] if quick else LENS
+    rng = np.random.default_rng(0)
+    out = []
+    for s in lens:
+        tok = jnp.asarray(rng.integers(0, cfg.vocab, (1, s)), jnp.int32)
+        for name, ps, mode in [
+            ("vlut_packed", packed, "serve"),
+            ("mad_dense", params, "serve"),
+        ]:
+            fn = jax.jit(
+                lambda p, t, mode=mode: prefill(
+                    p, t, init_cache(cfg, 1, max_len=s + 8), cfg, mode=mode
+                )
+            )
+            sec = time_fn(fn, ps, tok, warmup=1, repeats=3)
+            tps = s / sec
+            emit(f"prefill/len{s}/{name}", sec, f"{tps:.1f} tok/s")
+            out.append((s, name, tps))
+    # Fig 13 claim: throughput grows with prompt length for vec-LUT
+    vl = [t for s, n, t in out if n == "vlut_packed"]
+    if len(vl) >= 2:
+        emit("prefill/scaling_first_to_last", 0.0, f"{vl[-1] / vl[0]:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,54 @@
+"""Roofline table from dry-run JSONL results (deliverable g / §Roofline).
+
+Reads results/dryrun_*.jsonl and prints, per (arch × shape × mesh):
+three roofline terms (s), dominant bottleneck, MODEL_FLOPS/HLO ratio,
+memory efficiency, and per-device state bytes."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def load_rows(pattern: str = "results/dryrun_*.jsonl"):
+    rows = []
+    for path in sorted(glob.glob(pattern)):
+        for line in open(path):
+            rows.append(json.loads(line))
+    # last record wins per (arch, shape, mesh, variant)
+    dedup = {}
+    for r in rows:
+        key = (r["arch"], r["shape"], r.get("mesh"), r.get("variant", "baseline"))
+        dedup[key] = r
+    return list(dedup.values())
+
+
+def run(quick: bool = True):
+    rows = load_rows()
+    if not rows:
+        emit("roofline/no_results", 0.0, "run repro.launch.dryrun first")
+        return
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r.get("mesh", ""))):
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh')}/{r.get('variant','baseline')}"
+        if r["status"] == "skipped":
+            emit(tag, 0.0, "N/A (full-attention arch at 500k)")
+            continue
+        if r["status"] != "ok":
+            emit(tag, 0.0, f"ERROR {r.get('error', '')[:80]}")
+            continue
+        rl = r["roofline"]
+        emit(
+            tag,
+            rl[max(("compute_s", "memory_s", "collective_s"), key=lambda k: rl[k])] * 1e6,
+            f"dom={rl['dominant']} "
+            f"terms=({rl['compute_s']:.4f}/{rl['memory_s']:.4f}/{rl['collective_s']:.4f})s "
+            f"useful={rl['useful_flops_ratio']:.3f} "
+            f"memeff={rl.get('memory_efficiency', 0):.3f} "
+            f"state/dev={r.get('state_bytes_per_device', 0) / 2**30:.2f}GiB",
+        )
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,42 @@
+"""Offline weight transformation (paper §3.1 stage (i), Fig. 5 left):
+QAT/dense checkpoint → ternary quantize → flexible sub-2-bit trit packing →
+serve-ready parameter tree. Reports per-arch bits/weight.
+
+    PYTHONPATH=src python examples/convert_and_pack.py [--arch mamba2-1.3b]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.models import (
+    encdec_init,
+    init_lm,
+    pack_params,
+    packed_param_bytes,
+    param_count,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    init = encdec_init if cfg.family == "encdec" else init_lm
+    dense = init(jax.random.PRNGKey(0), cfg)
+    packed = pack_params(dense, cfg)
+
+    n = param_count(dense)
+    db, pb = packed_param_bytes(dense), packed_param_bytes(packed)
+    print(f"arch={cfg.name}")
+    print(f"params:            {n:,}")
+    print(f"dense bytes:       {db:,} ({8 * db / n:.2f} bits/param)")
+    print(f"packed bytes:      {pb:,} ({8 * pb / n:.2f} bits/param incl. "
+          f"embeddings+norms kept high-precision)")
+    print(f"compression:       {db / pb:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

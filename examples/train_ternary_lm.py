@@ -1,0 +1,59 @@
+"""End-to-end driver: train a ~100M-param ternary (QAT) LM for a few hundred
+steps on the synthetic bigram corpus, with checkpoints + fault tolerance.
+
+    PYTHONPATH=src python examples/train_ternary_lm.py \
+        [--steps 300] [--d-model 512] [--layers 8] [--full-100m]
+
+`--full-100m` uses a ~100M-parameter model (slow on 1 CPU core); the default
+is a scaled-down config with identical code paths.
+"""
+import argparse
+
+from repro.configs.base import ModelConfig, uniform_layers
+from repro.data import DataConfig
+from repro.dist.fault_tolerance import run_with_restarts
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ternary_lm")
+    args = ap.parse_args()
+
+    if args.full_100m:  # ~100M params
+        args.d_model, args.layers = 768, 12
+
+    cfg = ModelConfig(
+        name="ternary-lm-example",
+        n_layers=args.layers, d_model=args.d_model,
+        n_heads=args.d_model // 64, n_kv_heads=max(args.d_model // 128, 1),
+        head_dim=64, d_ff=args.d_model * 4, vocab=8192,
+        layers=uniform_layers(args.layers),
+        loss_chunk=128, attn_dense_max=4096,
+    )
+    tc = TrainConfig(
+        total_steps=args.steps, checkpoint_every=100,
+        checkpoint_dir=args.ckpt_dir, log_every=20, grad_compression=True,
+    )
+    opt = AdamWConfig(lr=3e-3, warmup_steps=args.steps // 10,
+                      total_steps=args.steps, int8_state=True)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+
+    def attempt(i):
+        t = Trainer(cfg, opt, tc, dc, install_signals=True)
+        log = t.run()
+        print(f"final loss: {log[-1]['loss']:.4f} "
+              f"(bigram entropy floor ≈ 1.386)")
+
+    run_with_restarts(attempt, max_restarts=2)
+
+
+if __name__ == "__main__":
+    main()

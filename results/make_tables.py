@@ -1,0 +1,104 @@
+"""Render EXPERIMENTS.md placeholders from dry-run / hillclimb JSONLs."""
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import SHAPES, list_archs  # noqa: E402
+
+
+def _fmt(v, n=4):
+    return f"{v:.{n}f}"
+
+
+def baseline_table(path="results/dryrun_baseline.jsonl") -> str:
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        rows[(r["arch"], r["shape"])] = r
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "useful | memeff | state/chip GiB | what moves the dominant term |\n")
+    hdr += "|" + "---|" * 10 + "\n"
+    out = [hdr]
+    notes = {
+        ("decode", "memory"): "in-place carry cache (§Perf E4); ≤2bpw weights already in baseline",
+        ("decode", "collective"): "batch-shard KV fully; overlap decode collectives",
+        ("train", "memory"): "flash-attn VMEM scores (§4.3); bigger fusion chunks",
+        ("train", "collective"): "shard MoE dispatch capacity (§4.2); async FSDP gathers",
+        ("train", "compute"): "drop remat refwd on cheap layers; fuse QAT quant",
+        ("prefill", "memory"): "flash-attn VMEM scores (§4.3)",
+        ("prefill", "collective"): "shard MoE dispatch capacity (§4.2)",
+    }
+    for arch in list_archs():
+        for shape in SHAPES:
+            r = rows.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                out.append(f"| {arch} | {shape} | — | — | — | N/A | — | — | — | "
+                           f"full-attention arch: 500k N/A (DESIGN §4) |\n")
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {arch} | {shape} | — | — | — | ERROR | — | — | — | "
+                           f"{r.get('error', '')[:60]} |\n")
+                continue
+            rl = r["roofline"]
+            kind = SHAPES[shape].kind
+            note = notes.get((kind, rl["dominant"]), "")
+            out.append(
+                f"| {arch} | {shape} | {_fmt(rl['compute_s'])} | "
+                f"{_fmt(rl['memory_s'])} | {_fmt(rl['collective_s'])} | "
+                f"**{rl['dominant']}** | {_fmt(rl['useful_flops_ratio'], 3)} | "
+                f"{_fmt(rl.get('memory_efficiency', 0), 3)} | "
+                f"{r.get('state_bytes_per_device', 0) / 2**30:.2f} | {note} |\n"
+            )
+    return "".join(out)
+
+
+def hillclimb_table(cell: str, path="results/perf_iterations.jsonl") -> str:
+    rows = [json.loads(l) for l in open(path)]
+    rows = [r for r in rows if r.get("cell") == cell]
+    if not rows:
+        return "(pending)\n"
+    out = ["| iter | hypothesis | compute_s | memory_s | collective_s | "
+           "dominant | Δ dominant |\n",
+           "|" + "---|" * 7 + "\n"]
+    prev_dom = None
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['label']} | {r['hypothesis'][:60]} | — | — | — | "
+                       f"ERROR | {r.get('error', '')[:40]} |\n")
+            continue
+        rl = r["roofline"]
+        dom_val = rl[rl["dominant"] + "_s"]
+        delta = ""
+        if prev_dom is not None and prev_dom > 0:
+            delta = f"{prev_dom / dom_val:.2f}× better" if dom_val < prev_dom \
+                else f"{dom_val / prev_dom:.2f}× worse"
+        prev_dom = dom_val
+        out.append(
+            f"| {r['label']} | {r['hypothesis'][:80]} | {_fmt(rl['compute_s'])} | "
+            f"{_fmt(rl['memory_s'])} | {_fmt(rl['collective_s'])} | "
+            f"{rl['dominant']} ({_fmt(dom_val)}s) | {delta} |\n"
+        )
+    return "".join(out)
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    try:
+        md = md.replace("TABLE-PLACEHOLDER-BASELINE", baseline_table())
+    except FileNotFoundError:
+        pass
+    for i, cell in enumerate(
+        ["deepseek_decode", "jamba_train", "internlm2_train"], 1
+    ):
+        try:
+            md = md.replace(f"HILLCLIMB-PLACEHOLDER-{i}", hillclimb_table(cell))
+        except FileNotFoundError:
+            pass
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

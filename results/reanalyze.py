@@ -1,0 +1,47 @@
+"""Recompute roofline fields of dry-run JSONL records from saved HLO
+(results/hlo/*.zst) — no recompilation needed after analyzer changes."""
+import json
+import sys
+
+import zstandard as zstd
+
+sys.path.insert(0, "src")
+from repro.configs import SHAPES, get_config            # noqa: E402
+from repro.roofline.analysis import Roofline, count_params, model_flops  # noqa: E402
+from repro.roofline.hlo_stats import parse_hlo_stats    # noqa: E402
+
+
+def main(paths):
+    for path in paths:
+        rows = [json.loads(l) for l in open(path)]
+        out = []
+        for r in rows:
+            if r.get("status") == "ok" and r.get("hlo_path"):
+                hlo = zstd.ZstdDecompressor().decompress(
+                    open(r["hlo_path"], "rb").read()
+                ).decode()
+                stats = parse_hlo_stats(hlo)
+                cfg = get_config(r["arch"])
+                n_total, n_active = count_params(cfg)
+                rl = Roofline(
+                    arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                    chips=r["chips"],
+                    flops_per_device=stats.dot_flops,
+                    bytes_per_device=stats.traffic_bytes,
+                    coll_bytes_per_device=stats.collective_bytes,
+                    coll_detail=stats.collectives,
+                    model_flops_total=model_flops(
+                        cfg, SHAPES[r["shape"]], n_total, n_active),
+                    min_bytes_per_device=float(r.get("state_bytes_per_device", 0)),
+                )
+                r["roofline"] = rl.row()
+            out.append(r)
+        with open(path, "w") as f:
+            for r in out:
+                f.write(json.dumps(r) + "\n")
+        print(f"reanalyzed {len(out)} records in {path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["results/dryrun_baseline.jsonl",
+                          "results/dryrun_multipod.jsonl"])

@@ -1,0 +1,4 @@
+"""repro.checkpoint — sharded atomic async checkpointing, elastic restore."""
+from .checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

@@ -1,0 +1,144 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout:  <dir>/step_<N>/
+           manifest.json       — leaf paths, shapes, dtypes, treedef repr
+           leaf_<i>.npy        — one file per pytree leaf (process 0's view;
+                                 multi-host would write per-process shards)
+           COMMIT              — written last; a step dir without COMMIT is
+                                 ignored (atomicity against mid-write failure)
+
+Restore re-shards onto the *current* mesh via device_put with the caller's
+NamedShardings — elastic scaling: a checkpoint written on mesh A restores
+onto mesh B (different shape/axis sizes) unchanged.
+
+Async: `save(..., blocking=False)` snapshots to host (device_get) then writes
+on a daemon thread; `wait()` joins before the next save or program exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SENTINEL = "COMMIT"
+
+#: numpy can't natively serialize ml_dtypes (bfloat16, fp8): store as a raw
+#: same-width integer view and record the true dtype in the manifest.
+_RAW_VIEWS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+              "float8_e5m2": np.uint8}
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state, extra: dict | None = None, blocking=True):
+        self.wait()
+        paths, leaves, _ = _leaf_paths(state)
+        host_leaves = []
+        for l in leaves:
+            arr = np.asarray(jax.device_get(l))
+            if str(arr.dtype) in _RAW_VIEWS:
+                arr = arr.view(_RAW_VIEWS[str(arr.dtype)])
+            host_leaves.append(arr)
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            manifest = {
+                "step": step,
+                "extra": extra or {},
+                "leaves": [
+                    {"path": p, "shape": list(l.shape), "dtype": str(t.dtype)}
+                    for p, (l, t) in zip(paths, zip(host_leaves, leaves))
+                ],
+            }
+            for i, l in enumerate(host_leaves):
+                np.save(os.path.join(tmp, f"leaf_{i}.npy"), l)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, _SENTINEL), "w") as f:
+                f.write("ok")
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                os.path.join(self.dir, name, _SENTINEL)
+            ):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, abstract_state, step: int | None = None, shardings=None):
+        """abstract_state: pytree matching the saved structure (shapes may be
+        resharded). shardings: optional matching tree of NamedShardings for
+        elastic placement; default = single-device host arrays.
+        → (state, extra)"""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        paths, leaves, treedef = _leaf_paths(abstract_state)
+        saved = {e["path"]: i for i, e in enumerate(manifest["leaves"])}
+        out_leaves = []
+        sh_leaves = (
+            jax.tree_util.tree_flatten_with_path(shardings)[0]
+            if shardings is not None else None
+        )
+        for j, (p, ab) in enumerate(zip(paths, leaves)):
+            if p not in saved:
+                raise KeyError(f"checkpoint missing leaf {p}")
+            arr = np.load(os.path.join(d, f"leaf_{saved[p]}.npy"))
+            want_dt = manifest["leaves"][saved[p]]["dtype"]
+            if str(arr.dtype) != want_dt and want_dt in _RAW_VIEWS:
+                arr = arr.view(np.dtype(want_dt))
+            if tuple(arr.shape) != tuple(ab.shape):
+                raise ValueError(f"shape mismatch for {p}: {arr.shape} vs {ab.shape}")
+            if sh_leaves is not None:
+                arr = jax.device_put(arr, sh_leaves[j][1])
+            out_leaves.append(arr)
+        state = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        return state, manifest.get("extra", {})

@@ -1,0 +1,52 @@
+"""repro.core — the paper's contribution: Vec-LUT vector-table-lookup mpGeMM.
+
+Public surface:
+  packing    — ternary trit-code packing (I1/I2/mixed sub-2-bit), PackedWeight
+  quantize   — BitNet-b1.58 absmean ternary + per-token int8 activations (+STE)
+  vlut       — Algorithm 1: unified vector LUT precompute + 1→N lookup GEMM
+  baselines  — scalar-LUT (T-MAC-like) and MAD (llama.cpp-like) comparators
+"""
+from .packing import (
+    GROUP_SIZES,
+    PackedWeight,
+    pack_group_sizes,
+    pack_ternary,
+    pack_weight,
+    sign_matrix,
+    unpack_ternary,
+)
+from .quantize import (
+    QuantizedActivation,
+    TernaryWeight,
+    act_quant_int8,
+    fake_act_quant,
+    fake_ternary,
+    fake_ternary_cols,
+    ternary_dequantize,
+    ternary_quantize,
+)
+from .vlut import (
+    lookup_accumulate,
+    max_block_int16,
+    precompute_lut,
+    precompute_lut_naive,
+    precompute_lut_topological,
+    vlut_gemm,
+)
+from .baselines import (
+    dense_gemm_f32,
+    lut_gemm_auto,
+    mad_gemm,
+    mad_gemm_int8,
+    scalar_lut_gemm,
+)
+
+__all__ = [
+    "GROUP_SIZES", "PackedWeight", "pack_group_sizes", "pack_ternary",
+    "pack_weight", "sign_matrix", "unpack_ternary",
+    "QuantizedActivation", "TernaryWeight", "act_quant_int8", "fake_act_quant",
+    "fake_ternary", "fake_ternary_cols", "ternary_dequantize", "ternary_quantize",
+    "lookup_accumulate", "max_block_int16", "precompute_lut",
+    "precompute_lut_naive", "precompute_lut_topological", "vlut_gemm",
+    "dense_gemm_f32", "lut_gemm_auto", "mad_gemm", "mad_gemm_int8", "scalar_lut_gemm",
+]

@@ -1,0 +1,106 @@
+"""Baseline mpGeMM kernels the paper compares against (§2.2, §5.1).
+
+* scalar_lut_gemm  — T-MAC-style scalar LUT: one table *per token*, N×
+  repeated 1→1 lookups (paper Fig. 1(b-1)). Implemented as a vmap over tokens
+  of a single-token LUT GEMM, with the per-token feature-major table layout —
+  the memory-access pattern the paper diagnoses.
+* mad_gemm         — llama.cpp-style MAD: dequantize the packed weights to a
+  dense matrix at use time, then multiply-add (paper §2.2.1).
+* dense_int8_gemm  — dequantization-free int8 reference (Q8_0 analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .packing import PackedWeight, sign_matrix, unpack_ternary
+
+
+def _token_lut_gemm(packed: jax.Array, a_tok: jax.Array, g: int) -> jax.Array:
+    """Single-token scalar-LUT GEMM: a_tok (K,) int8 → (M,) int32.
+
+    Builds this token's own table T_n (Kg, 3^g) — feature-major, as in T-MAC —
+    then performs a 1→1 lookup per (m, k).
+    """
+    K = a_tok.shape[0]
+    s = jnp.asarray(sign_matrix(g), jnp.int8)                        # (3^g, g)
+    a_grp = a_tok.reshape(K // g, g)
+    t_n = jax.lax.dot_general(                                       # (Kg, 3^g)
+        a_grp, s, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.int16)
+
+    def one_row(w_row):                                              # (Kg,)
+        vals = jnp.take_along_axis(t_n, w_row.astype(jnp.int32)[:, None], axis=1)
+        return jnp.sum(vals[:, 0].astype(jnp.int32))
+
+    return jax.vmap(one_row)(packed)                                 # (M,)
+
+
+def _segment_scalar(packed: jax.Array, a_q: jax.Array, g: int) -> jax.Array:
+    # N independent tables + N independent lookup passes (the 1→1 paradigm).
+    return jax.vmap(
+        functools.partial(_token_lut_gemm, g=g), in_axes=(None, 1), out_axes=1
+    )(packed, a_q)
+
+
+@jax.jit
+def scalar_lut_gemm(pw: PackedWeight, a: jax.Array) -> jax.Array:
+    """T-MAC-style scalar-LUT mpGeMM. a: (K, N) float → (M, N) f32."""
+    amax = jnp.max(jnp.abs(a), axis=0)
+    a_scale = jnp.maximum(amax, 1e-6) / 127.0
+    a_q = jnp.clip(jnp.round(a / a_scale[None, :]), -127, 127).astype(jnp.int8)
+    out = jnp.zeros((pw.M, a.shape[1]), jnp.int32)
+    if pw.packed5.shape[-1]:
+        out = out + _segment_scalar(pw.packed5, a_q[: pw.k5], 5)
+    if pw.packed4.shape[-1]:
+        out = out + _segment_scalar(pw.packed4, a_q[pw.k5:], 4)
+    w_scale = pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))
+    return out.astype(jnp.float32) * w_scale[:, None] * a_scale[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("compute_dtype",))
+def mad_gemm(pw: PackedWeight, a: jax.Array, compute_dtype=jnp.float32) -> jax.Array:
+    """MAD-based mpGeMM: unpack → dequantize → dense multiply-add (llama.cpp
+    TQ1_0/TQ2_0 analogue). a: (K, N) float → (M, N) f32."""
+    w_t = pw.unpack().astype(compute_dtype)                          # (M, K)
+    w_scale = pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))
+    w = w_t * w_scale[:, None].astype(compute_dtype)
+    return jnp.dot(w, a.astype(compute_dtype)).astype(jnp.float32)
+
+
+@jax.jit
+def mad_gemm_int8(pw: PackedWeight, a: jax.Array) -> jax.Array:
+    """MAD with int8 activations and int8 ternary weights (bitnet.cpp I2_S
+    analogue): unpack (no dequant) then int8×int8→int32 dot."""
+    amax = jnp.max(jnp.abs(a), axis=0)
+    a_scale = jnp.maximum(amax, 1e-6) / 127.0
+    a_q = jnp.clip(jnp.round(a / a_scale[None, :]), -127, 127).astype(jnp.int8)
+    w_t = pw.unpack()                                                # int8 (M, K)
+    out = jax.lax.dot_general(
+        w_t, a_q, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    w_scale = pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))
+    return out.astype(jnp.float32) * w_scale[:, None] * a_scale[None, :]
+
+
+@jax.jit
+def dense_gemm_f32(w: jax.Array, a: jax.Array) -> jax.Array:
+    """Unquantized dense GEMM (upper-accuracy reference)."""
+    return jnp.dot(w.astype(jnp.float32), a.astype(jnp.float32))
+
+
+def lut_gemm_auto(pw: PackedWeight, a: jax.Array, n_switch: int = 8) -> jax.Array:
+    """Paper §6.3: switch between scalar and vector LUT by parallel-token
+    count — scalar-LUT wins single-token decode, vector-LUT wins N ≥ ~8
+    (crossover measured on this host in benchmarks/gemm_bench: scalar is
+    2–3× faster at N=1, vector 2.3–3.6× faster at N ≥ 8). N is static under
+    jit, so the dispatch costs nothing at runtime."""
+    from .vlut import vlut_gemm
+
+    if a.shape[1] < n_switch:
+        return scalar_lut_gemm(pw, a)
+    return vlut_gemm(pw, a)

@@ -1,0 +1,162 @@
+"""Ternary weight packing for Vec-LUT (paper §3.3, Fig. 6).
+
+A ternary weight group of ``g`` elements (each in {-1, 0, 1}) is packed into a
+single byte holding the base-3 ("trit") code
+
+    idx = sum_j (w[j] + 1) * 3**j,   0 <= idx < 3**g,
+
+so the packed byte is *directly* the row index into the vector LUT (paper's
+"packed weights as flexible decimal indices" — no hardware-shuffle bit-width
+limit, hence g=5 → 243 entries → 1.60 bits/weight).
+
+Supported packings (paper §3.3 "Flexible sub-2-bit weight packing"):
+  * I2 : g=4, 2.00 bpw
+  * I1 : g=5, 1.60 bpw
+  * mixed (I1F): K = 5*b + 4*a split into a 5-group segment followed by a
+    4-group segment — covers any K >= 12 (and many below) losslessly with
+    near-1.6 bpw.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GROUP_SIZES = (4, 5)
+#: trit radix
+_R = 3
+
+
+@functools.lru_cache(maxsize=None)
+def sign_matrix(g: int, dtype=np.int8) -> np.ndarray:
+    """The (3**g, g) enumeration matrix S with S[i, j] = j-th trit of i, minus 1.
+
+    Row i of ``S`` is the ternary weight pattern whose packed index is i
+    (paper Fig. 6); the vector LUT sub-table is exactly ``S @ A_group``.
+    """
+    idx = np.arange(_R**g, dtype=np.int32)
+    js = _R ** np.arange(g, dtype=np.int32)
+    trits = (idx[:, None] // js[None, :]) % _R - 1
+    return trits.astype(dtype)
+
+
+def pack_group_sizes(K: int) -> tuple[int, int]:
+    """Return (n5, n4): number of g=5 and g=4 groups with 5*n5 + 4*n4 == K.
+
+    Maximizes the number of 5-groups (lowest bpw). Raises if K cannot be
+    expressed (only K in {1,2,3,6,7,11} fail).
+    """
+    for n5 in range(K // 5, -1, -1):
+        rem = K - 5 * n5
+        if rem % 4 == 0:
+            return n5, rem // 4
+    raise ValueError(f"K={K} cannot be packed with groups of 4 and 5")
+
+
+def pack_ternary(w: jax.Array, g: int) -> jax.Array:
+    """Pack ternary int8 weights (..., K) with g | K into uint8 codes (..., K//g)."""
+    K = w.shape[-1]
+    if K % g:
+        raise ValueError(f"K={K} not divisible by group size g={g}")
+    wg = w.reshape(*w.shape[:-1], K // g, g).astype(jnp.int32) + 1
+    place = (_R ** jnp.arange(g, dtype=jnp.int32))
+    idx = jnp.sum(wg * place, axis=-1)
+    return idx.astype(jnp.uint8)
+
+
+def unpack_ternary(packed: jax.Array, g: int) -> jax.Array:
+    """Inverse of :func:`pack_ternary` → int8 ternary values (..., Kg*g)."""
+    idx = packed.astype(jnp.int32)
+    place = (_R ** jnp.arange(g, dtype=jnp.int32))
+    trits = (idx[..., None] // place) % _R - 1
+    return trits.reshape(*packed.shape[:-1], packed.shape[-1] * g).astype(jnp.int8)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class PackedWeight:
+    """Ternary weight (M, K) stored as 1–2 packed uint8 segments + scales.
+
+    Segment 0 packs K5 = 5*n5 input features with g=5; segment 1 packs the
+    remaining 4*n4 features with g=4. Either may be empty. ``scale`` is the
+    per-output-channel (M,) dequantization scale (float32); ``scale_in`` an
+    optional per-input-channel scale is folded into activations by callers.
+    """
+
+    packed5: jax.Array  # (..., M, K5//5) uint8  (possibly zero-width)
+    packed4: jax.Array  # (..., M, K4//4) uint8  (possibly zero-width)
+    scale: jax.Array    # (..., M) or (..., 1) float32
+    K: int              # static: total input features
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return (
+            (ga("packed5"), self.packed5),
+            (ga("packed4"), self.packed4),
+            (ga("scale"), self.scale),
+        ), (self.K,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, K=aux[0])
+
+    # -- static geometry ---------------------------------------------------
+    @property
+    def M(self) -> int:
+        return self.packed5.shape[-2]
+
+    @property
+    def k5(self) -> int:
+        return self.packed5.shape[-1] * 5
+
+    @property
+    def k4(self) -> int:
+        return self.packed4.shape[-1] * 4
+
+    @property
+    def bits_per_weight(self) -> float:
+        nbytes = self.packed5.shape[-1] + self.packed4.shape[-1]
+        return 8.0 * nbytes / self.K
+
+    def unpack(self) -> jax.Array:
+        """Dense ternary int8 (..., M, K)."""
+        parts = []
+        if self.packed5.shape[-1]:
+            parts.append(unpack_ternary(self.packed5, 5))
+        if self.packed4.shape[-1]:
+            parts.append(unpack_ternary(self.packed4, 4))
+        return jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
+
+
+def pack_weight(w_ternary: jax.Array, scale: jax.Array, mode: str = "auto") -> PackedWeight:
+    """Pack a ternary int8 weight (..., M, K) into a :class:`PackedWeight`.
+
+    mode: 'i2' (g=4 only), 'i1' (g=5 only; requires 5|K), 'auto'/'i1f'
+    (maximal 5-groups, remainder in 4-groups).
+    """
+    K = w_ternary.shape[-1]
+    if mode == "i2":
+        n5, n4 = 0, K // 4
+        if K % 4:
+            raise ValueError(f"I2 packing needs 4|K, got K={K}")
+    elif mode == "i1":
+        if K % 5:
+            raise ValueError(f"I1 packing needs 5|K, got K={K}")
+        n5, n4 = K // 5, 0
+    else:
+        n5, n4 = pack_group_sizes(K)
+    k5 = 5 * n5
+    lead = w_ternary.shape[:-2]
+    m = w_ternary.shape[-2]
+    p5 = (pack_ternary(w_ternary[..., :k5], 5) if n5
+          else jnp.zeros((*lead, m, 0), jnp.uint8))
+    p4 = (pack_ternary(w_ternary[..., k5:], 4) if n4
+          else jnp.zeros((*lead, m, 0), jnp.uint8))
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.ndim == len(lead):  # per-tensor -> broadcastable (..., 1)
+        scale = scale[..., None]
+    return PackedWeight(p5, p4, scale, K=K)

@@ -1,0 +1,92 @@
+"""Quantization: BitNet-b1.58 absmean ternary weights + per-token int8 activations.
+
+Weight path (paper §2.1.2/§5.1: the models are *natively* ternary — BitNet,
+Llama3-1.58, Falcon3-1.58; for the assigned architecture zoo we ternarize with
+the BitNet b1.58 recipe):
+
+    scale = mean(|W|)           (per output channel or per tensor)
+    W_t   = round(clip(W / scale, -1, 1))  in {-1, 0, 1}
+    W     ~= scale * W_t
+
+Activation path (paper §3.4: "per-token symmetrically quantized to INT8"):
+
+    a_scale[n] = max_k |A[k, n]| / 127
+    A_q = round(A / a_scale)  int8
+
+Training uses the straight-through estimator (QAT) so the same module
+definition trains with fake-quant and serves with packed weights.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+Q_MAX = 127.0
+
+
+class TernaryWeight(NamedTuple):
+    values: jax.Array  # int8 ternary, same shape as source weight
+    scale: jax.Array   # f32, per-channel (M,) or scalar ()
+
+
+def ternary_quantize(w: jax.Array, per_channel: bool = True) -> TernaryWeight:
+    """Absmean ternary quantization (BitNet b1.58). w: (..., M, K) float."""
+    w = w.astype(jnp.float32)
+    if per_channel:
+        scale = jnp.mean(jnp.abs(w), axis=-1) + EPS        # (..., M)
+        t = jnp.round(w / scale[..., None])
+    else:
+        scale = jnp.mean(jnp.abs(w), axis=(-2, -1)) + EPS  # (...,)
+        t = jnp.round(w / scale[..., None, None])
+    t = jnp.clip(t, -1, 1)
+    return TernaryWeight(t.astype(jnp.int8), scale)
+
+
+def ternary_dequantize(tw: TernaryWeight) -> jax.Array:
+    scale = tw.scale[..., None] if tw.scale.ndim == tw.values.ndim - 1 else tw.scale
+    return tw.values.astype(jnp.float32) * scale
+
+
+def fake_ternary(w: jax.Array, per_channel: bool = True) -> jax.Array:
+    """QAT fake-quant with straight-through estimator: forward = dequant(quant(w)),
+    backward = identity. Used by BitLinear in training mode."""
+    tw = ternary_quantize(w, per_channel)
+    wq = ternary_dequantize(tw).astype(w.dtype)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def fake_ternary_cols(w: jax.Array) -> jax.Array:
+    """STE fake-quant of a (..., K, M) weight with per-OUTPUT-channel (M)
+    absmean scales, computed without transposes — keeps pjit shardings
+    intact (transposing a (fsdp, model)-sharded weight forces an SPMD
+    "involuntary full rematerialization")."""
+    wf = w.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(wf), axis=-2, keepdims=True) + EPS      # (...,1,M)
+    t = jnp.clip(jnp.round(wf / scale), -1, 1)
+    wq = (t * scale).astype(w.dtype)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+class QuantizedActivation(NamedTuple):
+    values: jax.Array  # int8
+    scale: jax.Array   # f32, per-token (broadcastable against values on `axis`)
+
+
+def act_quant_int8(a: jax.Array, axis: int = -1) -> QuantizedActivation:
+    """Symmetric per-token int8 quantization; `axis` is the *feature* axis that
+    is reduced (each token keeps its own scale)."""
+    a = a.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / Q_MAX
+    q = jnp.clip(jnp.round(a / scale), -Q_MAX, Q_MAX).astype(jnp.int8)
+    return QuantizedActivation(q, scale)
+
+
+def fake_act_quant(a: jax.Array, axis: int = -1) -> jax.Array:
+    """STE int8 activation fake-quant (training path)."""
+    q = act_quant_int8(a, axis)
+    deq = (q.values.astype(jnp.float32) * q.scale).astype(a.dtype)
+    return a + jax.lax.stop_gradient(deq - a)

@@ -1,0 +1,291 @@
+"""Vector LUT mpGeMM — faithful JAX implementation of the paper's Algorithm 1.
+
+Computes  O = W x A  with ternary W (M, K) packed as uint8 trit-codes and
+activation A (K, N) in the paper's *token-contiguous* layout (N last/minor).
+
+Pipeline (paper §3.2):
+  1. LUT precompute:  T[k, i, :] = sum_j GetSign(i, j) * A[k*g + j, :]
+     == S(3^g, g) @ A_group(g, N)   — one unified table for all N tokens.
+  2. Table lookup & accumulate:  O[m, :] += T[k, W[m, k], :]
+     — a single 1→N row gather per index (vector LUT), never a per-token
+     (1→1, scalar LUT) lookup.
+
+Implemented variants (each maps to a paper technique; the benchmark/ablation
+harness toggles them to reproduce Fig. 12):
+  * streamed vs whole-table execution       (§3.4 Cache-Aware Streamed Lookup)
+  * hierarchical INT16→INT32 accumulation   (§3.4)
+  * token-contiguous vs feature-contiguous LUT layout (§3.3, the 12× ablation)
+  * topological (3^g-op) vs naive (2*3^{g-1}*g-op) precompute (§4)
+  * K/N tiling with paper §4 tile-size rules (N_tile, K_tile)
+
+All functions are jit-friendly pure JAX; these are the *reference semantics*
+for the Pallas kernels in `repro.kernels` and the engine used by the CPU
+benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .packing import PackedWeight, sign_matrix
+
+
+def max_block_int16(g: int) -> int:
+    """Paper §3.4: INT16 intra-block accumulation is overflow-free for
+    B <= floor(max(INT16) / (max(INT8) * g)) — 64 is quoted for g=4 with the
+    paper's looser bound; we use the strict bound (64 for g=4, 51 for g=5)."""
+    return int(32767 // (127 * g))
+
+
+# --------------------------------------------------------------------------
+# LUT precompute
+# --------------------------------------------------------------------------
+def precompute_lut(a_q: jax.Array, g: int) -> jax.Array:
+    """Unified vector LUT. a_q: (K, N) int8 → T: (K//g, 3^g, N) int16.
+
+    TPU-adapted "topological precompute": the whole sub-table is one matmul
+    with the compile-time sign-enumeration matrix S (DESIGN.md §2) — same
+    op-reduction goal as the paper's serial reuse chain, MXU-friendly.
+    """
+    K, N = a_q.shape
+    if K % g:
+        raise ValueError(f"K={K} not divisible by g={g}")
+    s = jnp.asarray(sign_matrix(g), jnp.int8)                        # (3^g, g)
+    a_grp = a_q.reshape(K // g, g, N)                                # (Kg, g, N)
+    t = jax.lax.dot_general(
+        s, a_grp,
+        dimension_numbers=(((1,), (1,)), ((), ())),                  # (3^g, Kg, N)
+        preferred_element_type=jnp.int32,
+    )
+    return t.transpose(1, 0, 2).astype(jnp.int16)                    # (Kg, 3^g, N)
+
+
+def precompute_lut_topological(a_q: jax.Array, g: int) -> jax.Array:
+    """Paper §4 'Topological precomputing' — builds the 3^g entries with
+    3^g - 1 vector add/subs by reusing already-computed entries.
+
+    For entry i, let j be the position of its lowest nonzero trit; then
+    T[i] = T[i - 3^j] + a_j (one vector add), and T[0] = -sum_j a_j seeds the
+    chain. Serial dependency chain → kept for the CPU benchmarks / op-count
+    ablation (on TPU the MXU matmul in :func:`precompute_lut` wins; DESIGN.md).
+    """
+    K, N = a_q.shape
+    kg = K // g
+    a_grp = a_q.reshape(kg, g, N).astype(jnp.int16)
+    n_entries = 3 ** g
+
+    # Host-side dependency plan (static for a given g).
+    parents = np.zeros(n_entries, np.int32)
+    addrow = np.zeros(n_entries, np.int32)
+    for i in range(1, n_entries):
+        j, ii = 0, i
+        while ii % 3 == 0:
+            ii //= 3
+            j += 1
+        parents[i] = i - 3 ** j
+        addrow[i] = j
+
+    table = jnp.zeros((kg, n_entries, N), jnp.int16)
+    table = table.at[:, 0, :].set(-jnp.sum(a_grp, axis=1, dtype=jnp.int16))
+    parents_j = jnp.asarray(parents)
+    addrow_j = jnp.asarray(addrow)
+
+    def step(i, tab):
+        entry = tab[:, parents_j[i], :] + a_grp[:, addrow_j[i], :]
+        return tab.at[:, i, :].set(entry)
+
+    return jax.lax.fori_loop(1, n_entries, step, table)
+
+
+def precompute_lut_naive(a_q: jax.Array, g: int) -> jax.Array:
+    """Paper Alg. 1 lines 7–19 verbatim (per-entry sign add/sub loop): the
+    2*3^{g-1}*g-op baseline for the topological-precompute ablation."""
+    K, N = a_q.shape
+    s = sign_matrix(g)                                               # host const
+    a_grp = a_q.reshape(K // g, g, N).astype(jnp.int16)
+
+    entries = []
+    for i in range(3 ** g):
+        acc = jnp.zeros((K // g, N), jnp.int16)
+        for j in range(g):
+            sgn = int(s[i, j])
+            if sgn == 1:
+                acc = acc + a_grp[:, j, :]
+            elif sgn == -1:
+                acc = acc - a_grp[:, j, :]
+        entries.append(acc)
+    return jnp.stack(entries, axis=1)                                # (Kg, 3^g, N)
+
+
+# --------------------------------------------------------------------------
+# Lookup & accumulate
+# --------------------------------------------------------------------------
+def lookup_accumulate(
+    t: jax.Array,
+    w_idx: jax.Array,
+    hierarchical: bool = True,
+    g: int | None = None,
+) -> jax.Array:
+    """O[m, n] = sum_k T[k, W[m, k], n]   (paper Eq. 2) → int32 (M, N).
+
+    hierarchical=True performs the paper's INT16 intra-block / INT32
+    inter-block accumulation; False accumulates each row straight into INT32.
+    """
+    kg, n_entries, n = t.shape
+    m = w_idx.shape[0]
+    g = g if g is not None else {81: 4, 243: 5}[n_entries]
+    block = max_block_int16(g)
+
+    def gather_rows(t_k, w_k):  # (3^g, N), (M,) -> (M, N): the 1→N lookup
+        return jnp.take(t_k, w_k.astype(jnp.int32), axis=0)
+
+    if hierarchical and kg > 1:
+        pad = (-kg) % block
+        zero_code = (n_entries - 1) // 2  # all-zero-trit row ≡ 0 contribution
+        tp = jnp.pad(t, ((0, pad), (0, 0), (0, 0)))
+        wp = jnp.pad(w_idx, ((0, 0), (0, pad)), constant_values=zero_code)
+        nb = (kg + pad) // block
+        tb = tp.reshape(nb, block, n_entries, n)
+        wb = wp.reshape(m, nb, block).transpose(1, 2, 0)             # (nb, block, M)
+
+        def blk(carry, xs):
+            t_blk, w_blk = xs                     # (block, 3^g, N), (block, M)
+            rows = jax.vmap(gather_rows)(t_blk, w_blk)   # (block, M, N) int16
+            part = jnp.sum(rows, axis=0, dtype=jnp.int16)  # INT16 intra-block
+            return carry + part.astype(jnp.int32), None
+
+        out, _ = jax.lax.scan(blk, jnp.zeros((m, n), jnp.int32), (tb, wb))
+        return out
+
+    def one_k(carry, xs):
+        t_k, w_k = xs
+        return carry + gather_rows(t_k, w_k).astype(jnp.int32), None
+
+    out, _ = jax.lax.scan(one_k, jnp.zeros((m, n), jnp.int32), (t, w_idx.T))
+    return out
+
+
+def _segment_gemm_int(
+    packed: jax.Array,
+    a_q: jax.Array,
+    g: int,
+    *,
+    streamed: bool,
+    k_tile_groups: int,
+    hierarchical: bool,
+    precompute: Literal["matmul", "topological", "naive"],
+) -> jax.Array:
+    """Integer vlut GEMM for one homogeneous-g segment. a_q: (K, N) int8.
+
+    streamed=True: scan over K-tiles, precomputing each LUT tile on demand and
+    consuming it immediately (§3.4 — the full table never exists in memory).
+    streamed=False: materialize the entire T first (the "existing kernels'
+    practice" the paper ablates against in Fig. 12).
+    """
+    kfn = {
+        "matmul": precompute_lut,
+        "topological": precompute_lut_topological,
+        "naive": precompute_lut_naive,
+    }[precompute]
+    K, N = a_q.shape
+    kg = K // g
+    m = packed.shape[0]
+
+    if not streamed:
+        t = kfn(a_q, g)
+        return lookup_accumulate(t, packed, hierarchical=hierarchical, g=g)
+
+    kt = max(1, min(k_tile_groups, kg))
+    pad_g = (-kg) % kt
+    zero_code = (3 ** g - 1) // 2  # all-zero trits → contributes 0
+    a_pad = jnp.pad(a_q.reshape(kg, g, N), ((0, pad_g), (0, 0), (0, 0)))
+    w_pad = jnp.pad(packed, ((0, 0), (0, pad_g)), constant_values=zero_code)
+    nkt = (kg + pad_g) // kt
+    a_tiles = a_pad.reshape(nkt, kt * g, N)
+    w_tiles = w_pad.reshape(m, nkt, kt).transpose(1, 0, 2)
+
+    def tile_step(carry, xs):
+        a_t, w_t = xs                                  # (kt*g, N), (M, kt)
+        t_tile = kfn(a_t, g)                           # (kt, 3^g, N) in "cache"
+        out = lookup_accumulate(t_tile, w_t, hierarchical=hierarchical, g=g)
+        return carry + out, None
+
+    out, _ = jax.lax.scan(tile_step, jnp.zeros((m, N), jnp.int32), (a_tiles, w_tiles))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Public mpGeMM entry point
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "streamed", "k_tile_groups", "n_tile", "hierarchical", "precompute",
+        "token_contiguous",
+    ),
+)
+def vlut_gemm(
+    pw: PackedWeight,
+    a: jax.Array,
+    *,
+    streamed: bool = True,
+    k_tile_groups: int = 16,
+    n_tile: int = 0,
+    hierarchical: bool = True,
+    precompute: Literal["matmul", "topological", "naive"] = "matmul",
+    token_contiguous: bool = True,
+) -> jax.Array:
+    """Full Vec-LUT mpGeMM:  O(M, N) f32 = dequant( W_packed × quant(A) ).
+
+    a: (K, N) float — token-contiguous activation (N minor), matching the
+    paper's Vector-LUT-centric layout. `token_contiguous=False` runs the
+    layout-ablation variant (feature-contiguous compute order, reproducing
+    the up-to-12× degradation of §5.5 qualitatively). `n_tile=0` disables
+    N tiling; otherwise tokens are processed in N_tile chunks (§4 rule:
+    multiples of the vector width).
+    """
+    if a.shape[0] != pw.K:
+        raise ValueError(f"A rows {a.shape[0]} != packed K {pw.K}")
+    N = a.shape[1]
+    if not token_contiguous:
+        # Feature-contiguous compute order: quantize & index along the hostile
+        # axis so every token touches strided memory (scalar-LUT-style layout).
+        a_ft = a.T                                                    # (N, K)
+        amax = jnp.max(jnp.abs(a_ft), axis=-1)
+        a_scale = jnp.maximum(amax, 1e-6) / 127.0                     # (N,)
+        a_q = jnp.clip(jnp.round(a_ft / a_scale[:, None]), -127, 127).astype(jnp.int8).T
+    else:
+        amax = jnp.max(jnp.abs(a), axis=0)
+        a_scale = jnp.maximum(amax, 1e-6) / 127.0                     # (N,)
+        a_q = jnp.clip(jnp.round(a / a_scale[None, :]), -127, 127).astype(jnp.int8)
+
+    def run(a_q_chunk):
+        out = jnp.zeros((pw.M, a_q_chunk.shape[1]), jnp.int32)
+        k5 = pw.k5
+        if pw.packed5.shape[-1]:
+            out = out + _segment_gemm_int(
+                pw.packed5, a_q_chunk[:k5], 5,
+                streamed=streamed, k_tile_groups=k_tile_groups,
+                hierarchical=hierarchical, precompute=precompute,
+            )
+        if pw.packed4.shape[-1]:
+            out = out + _segment_gemm_int(
+                pw.packed4, a_q_chunk[k5:], 4,
+                streamed=streamed, k_tile_groups=k_tile_groups,
+                hierarchical=hierarchical, precompute=precompute,
+            )
+        return out
+
+    if n_tile and n_tile < N and N % n_tile == 0:
+        chunks = a_q.reshape(pw.K, N // n_tile, n_tile).transpose(1, 0, 2)
+        out = jax.lax.map(run, chunks)                                # (nc, M, nt)
+        out_i32 = out.transpose(1, 0, 2).reshape(pw.M, N)
+    else:
+        out_i32 = run(a_q)
+
+    w_scale = pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))
+    return out_i32.astype(jnp.float32) * w_scale[:, None] * a_scale[None, :]

@@ -1,0 +1,4 @@
+"""repro.data — deterministic synthetic LM pipeline."""
+from .pipeline import DataConfig, SyntheticLM, host_batch_slice
+
+__all__ = ["DataConfig", "SyntheticLM", "host_batch_slice"]

@@ -1,0 +1,24 @@
+"""repro.kernels — Pallas TPU kernels for the Vec-LUT mpGeMM hot spot.
+
+  vlut_lookup_gemm.py   — paper-faithful streamed vector-LUT (VMEM table +
+                          1→N lookup), `pl.pallas_call` + BlockSpec tiling.
+  ternary_decode_gemm.py— beyond-paper TPU-native streamed decode + MXU dot
+                          (same ≤2-bit HBM format, same layout rules).
+  flash_attention.py    — IO-aware attention (VMEM-resident scores) for the
+                          train/prefill memory term (EXPERIMENTS §Perf).
+  ops.py                — jit wrappers: fused layout transform, padding,
+                          tile selection, backend dispatch, scales.
+  ref.py                — pure-jnp oracles (dense int32 ternary matmul).
+"""
+from .flash_attention import flash_attention, flash_attention_bsnd
+from .ops import select_tiles, ternary_matmul, vlut_mpgemm
+from .ref import ref_mpgemm, ref_mpgemm_int, ref_segment_gemm_int
+from .ternary_decode_gemm import ternary_decode_gemm
+from .vlut_lookup_gemm import vlut_lookup_gemm
+
+__all__ = [
+    "flash_attention", "flash_attention_bsnd",
+    "select_tiles", "ternary_matmul", "vlut_mpgemm",
+    "ref_mpgemm", "ref_mpgemm_int", "ref_segment_gemm_int",
+    "ternary_decode_gemm", "vlut_lookup_gemm",
+]

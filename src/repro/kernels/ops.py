@@ -1,0 +1,172 @@
+"""Public jit'd wrappers around the Vec-LUT TPU kernels.
+
+Responsibilities:
+  * the fused Vector-LUT-centric layout transformation (paper §3.3): token
+    flattening + transpose to token-minor + per-group de-interleave, fused by
+    XLA into the activation-quantization epilogue;
+  * padding to block multiples (padded K-groups carry the all-zero-trit code
+    so they contribute exactly 0);
+  * TPU-adapted tile-size selection (paper §4 rules, VMEM instead of L1);
+  * backend dispatch: Pallas kernels on TPU (or interpret=True for CPU
+    validation), and a shardable pure-XLA streamed-decode path used by the
+    multi-device dry-run (pjit-friendly, identical semantics);
+  * scale application (per-channel weight scale × per-token activation scale).
+
+The packed-serving path is inference-only by design (training runs the QAT
+fake-quant dense path; see repro/models/bitlinear.py), so no custom_vjp here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedWeight
+from .ternary_decode_gemm import ternary_decode_gemm
+from .vlut_lookup_gemm import vlut_lookup_gemm
+
+_R = 3
+
+Impl = Literal["decode", "lookup", "xla"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def select_tiles(g: int, impl: Impl, vmem_budget_bytes: int = 4 * 2**20):
+    """TPU adaptation of paper §4 tile-size selection.
+
+    N_tile: minimal multiple of the 128-lane vector width that still feeds
+    the MXU (paper: minimal multiple of SIMD width) → 128 for lookup, 256 for
+    decode (bigger N amortizes the decode).
+    K_tile: for 'lookup', the streamed table T (3^g · bkg · bn · 2B) must fit
+    the VMEM budget (paper: 3^g · N_tile · K_tile/g < L1); for 'decode' the
+    A tile (g · bkg · bn) dominates → bkg 128–256.
+    """
+    if impl == "lookup":
+        bn = 128
+        bkg = max(8, vmem_budget_bytes // (_R ** g * bn * 2))
+        bkg = min(128, 1 << (bkg.bit_length() - 1))                 # pow2 clamp
+        return dict(bm=128, bn=bn, bkg=bkg)
+    return dict(bm=128, bn=256, bkg=128)
+
+
+def _deinterleave(a_q: jax.Array, g: int) -> jax.Array:
+    """(K, N) → (g, K//g, N): A_r[j, k, :] = A[k*g+j, :] (§3.3 layout)."""
+    K, N = a_q.shape
+    return a_q.reshape(K // g, g, N).transpose(1, 0, 2)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _segment_gemm_int(
+    packed: jax.Array,
+    a_q_seg: jax.Array,
+    g: int,
+    impl: Impl,
+    interpret: bool,
+    tiles: dict | None,
+) -> jax.Array:
+    """One homogeneous-g segment: packed (M, KG) uint8 × a_q_seg (K, N) int8
+    → (M, N) int32, dispatched to the chosen kernel."""
+    m, kg = packed.shape
+    n = a_q_seg.shape[1]
+    if impl == "xla":
+        # Shardable streamed decode: scan over K-chunks so the transient
+        # dense tile stays small (the dry-run / pjit path).
+        return _xla_streamed_decode(packed, a_q_seg, g)
+
+    t = dict(select_tiles(g, impl))
+    if tiles:
+        t.update(tiles)
+    zero_code = (_R ** g - 1) // 2
+    packed_p = _pad_to(_pad_to(packed, 1, t["bkg"], value=zero_code), 0, 8)
+    a_r = _deinterleave(a_q_seg, g)
+    a_r = _pad_to(_pad_to(a_r, 1, t["bkg"]), 2, 128)
+    fn = ternary_decode_gemm if impl == "decode" else vlut_lookup_gemm
+    out = fn(packed_p, a_r, g=g, interpret=interpret, **t)
+    return out[:m, :n]
+
+
+def _xla_streamed_decode(
+    packed: jax.Array, a_q_seg: jax.Array, g: int, k_chunk_groups: int = 512
+) -> jax.Array:
+    """Pure-XLA streamed decode+dot: functionally the Pallas decode kernel,
+    expressed as a scan over K-group chunks (keeps the transient decoded tile
+    ≤ M×(k_chunk·g) int8). pjit-shardable: M shards freely; K sharding gives
+    row-parallel partial sums (psum inserted by SPMD)."""
+    m, kg = packed.shape
+    n = a_q_seg.shape[1]
+    if kg <= k_chunk_groups:
+        return _decode_dot(packed, a_q_seg, g)
+    zero_code = (_R ** g - 1) // 2
+    packed_p = _pad_to(packed, 1, k_chunk_groups, value=zero_code)
+    a_p = _pad_to(a_q_seg, 0, k_chunk_groups * g)
+    nc = packed_p.shape[1] // k_chunk_groups
+    w_c = packed_p.reshape(m, nc, k_chunk_groups).transpose(1, 0, 2)
+    a_c = a_p.reshape(nc, k_chunk_groups * g, n)
+
+    def step(acc, xs):
+        wc, ac = xs
+        return acc + _decode_dot(wc, ac, g), None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((m, n), jnp.int32), (w_c, a_c))
+    return out
+
+
+def _decode_dot(packed: jax.Array, a_q: jax.Array, g: int) -> jax.Array:
+    codes = packed.astype(jnp.int32)                                 # (M, KG)
+    trits = (codes[..., None] // (_R ** jnp.arange(g, dtype=jnp.int32))) % _R - 1
+    w_t = trits.reshape(packed.shape[0], packed.shape[1] * g).astype(jnp.int8)
+    return jax.lax.dot_general(
+        w_t, a_q, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "out_dtype"))
+def vlut_mpgemm(
+    pw: PackedWeight,
+    a: jax.Array,
+    *,
+    impl: Impl = "decode",
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Kernel-backed mpGeMM. a: (K, N) float, token-contiguous → (M, N)."""
+    amax = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=0)
+    a_scale = jnp.maximum(amax, 1e-6) / 127.0
+    a_q = jnp.clip(jnp.round(a / a_scale[None, :]), -127, 127).astype(jnp.int8)
+    out = jnp.zeros((pw.M, a.shape[1]), jnp.int32)
+    if pw.packed5.shape[-1]:
+        out = out + _segment_gemm_int(pw.packed5, a_q[: pw.k5], 5, impl, interpret, None)
+    if pw.packed4.shape[-1]:
+        out = out + _segment_gemm_int(pw.packed4, a_q[pw.k5:], 4, impl, interpret, None)
+    w_scale = pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))
+    return (out.astype(jnp.float32) * w_scale[:, None] * a_scale[None, :]).astype(out_dtype)
+
+
+def ternary_matmul(pw: PackedWeight, x: jax.Array, impl: Impl | None = None) -> jax.Array:
+    """Model-facing packed linear:  y(..., M) = x(..., K) · Wᵀ.
+
+    Fuses the token-first layout transformation (flatten tokens → transpose to
+    token-minor) around the kernel, per paper §3.3 "Fused activation and
+    output transformation". Chooses the Pallas kernel on TPU and the
+    shardable XLA streamed-decode elsewhere (incl. the multi-pod dry-run).
+    """
+    if impl is None:
+        impl = "decode" if on_tpu() else "xla"
+    lead = x.shape[:-1]
+    a = x.reshape(-1, x.shape[-1]).T                                 # (K, N) token-minor
+    out = vlut_mpgemm(pw, a, impl=impl, out_dtype=x.dtype)           # (M, N)
+    return out.T.reshape(*lead, pw.M)

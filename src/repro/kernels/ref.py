@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The oracle for every vlut/mpGeMM kernel is the *dense ternary matmul* in
+int32: unpack the trit codes, multiply, accumulate exactly. All kernels must
+match it bit-exactly on the integer output (the LUT transformation is lossless
+— paper §5.1 "our method is lossless for ternary weights").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedWeight, unpack_ternary
+
+
+def ref_segment_gemm_int(packed: jax.Array, a_q: jax.Array, g: int) -> jax.Array:
+    """Dense int32 reference for one homogeneous-g segment.
+
+    packed: (M, K//g) uint8, a_q: (K, N) int8 → (M, N) int32.
+    """
+    w_t = unpack_ternary(packed, g)                                  # (M, K) int8
+    return jax.lax.dot_general(
+        w_t, a_q, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def ref_mpgemm_int(pw: PackedWeight, a_q: jax.Array) -> jax.Array:
+    """Dense int32 reference over all segments. a_q: (K, N) int8 → (M, N)."""
+    out = jnp.zeros((pw.M, a_q.shape[1]), jnp.int32)
+    if pw.packed5.shape[-1]:
+        out = out + ref_segment_gemm_int(pw.packed5, a_q[: pw.k5], 5)
+    if pw.packed4.shape[-1]:
+        out = out + ref_segment_gemm_int(pw.packed4, a_q[pw.k5 :], 4)
+    return out
+
+
+def ref_mpgemm(pw: PackedWeight, a: jax.Array) -> jax.Array:
+    """Float end-to-end reference (per-token int8 act quant + dequant)."""
+    amax = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=0)
+    a_scale = jnp.maximum(amax, 1e-6) / 127.0
+    a_q = jnp.clip(jnp.round(a / a_scale[None, :]), -127, 127).astype(jnp.int8)
+    out = ref_mpgemm_int(pw, a_q)
+    w_scale = (
+        pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))
+    )
+    return out.astype(jnp.float32) * w_scale[:, None] * a_scale[None, :]

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: streamed ternary-decode mpGeMM (beyond-paper variant).
+
+TPU-native realization of Vec-LUT's memory-system insight (DESIGN.md §2):
+weights stay in HBM at 1.6/2.0 bits/weight as trit codes; each grid step
+streams a packed tile into VMEM, decodes it to {-1,0,1} int8 *in VMEM* (three
+VPU ops per trit position), and feeds the MXU with an int8×int8→int32 dot.
+No dequantized weight tensor ever exists in HBM — the analogue of the paper's
+"streamed precompute-lookup entirely in cache", with the MXU replacing the
+table since TPU matmul is cheaper than cross-sublane gathers.
+
+Layout contract (Vector-LUT-centric, paper §3.3 adapted):
+  * activation A is pre-deinterleaved to A_r (g, K//g, N): A_r[j, k, :] =
+    A[k*g + j, :] — token dim N minor/lane-contiguous. Done once in ops.py
+    ("fused activation transformation").
+  * packed weights W (M, K//g) uint8 — tile-contiguous via BlockSpec.
+  * output O (M, N) int32, token-contiguous.
+
+Per block (bm, bn, bkg):  O[i,j] += sum_j trit_j(W[i,k]) @ A_r[j,k,n]
+— g small matmuls of (bm × bkg) @ (bkg × bn), int32 accumulation in the
+revisited output block (grid minor dim = K).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_R = 3
+
+
+def _decode_gemm_kernel(w_ref, a_ref, o_ref, *, g: int, nk: int):
+    """One (bm, bn) output tile, one K-tile step.
+
+    w_ref: (bm, bkg) uint8; a_ref: (g, bkg, bn) int8; o_ref: (bm, bn) int32.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = w_ref[...].astype(jnp.int32)                   # (bm, bkg)
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for j in range(g):                                     # static unroll
+        trit = (codes // (_R ** j)) % _R - 1               # VPU decode, {-1,0,1}
+        acc = acc + jax.lax.dot_general(
+            trit.astype(jnp.int8),
+            a_ref[j],                                      # (bkg, bn) int8
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("g", "bm", "bn", "bkg", "interpret")
+)
+def ternary_decode_gemm(
+    packed: jax.Array,
+    a_r: jax.Array,
+    *,
+    g: int,
+    bm: int = 128,
+    bn: int = 256,
+    bkg: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """packed: (M, KG) uint8; a_r: (g, KG, N) int8 → (M, N) int32.
+
+    Block sizes follow the TPU-adapted §4 rules: bn multiple of 128 lanes
+    (N_tile rule), bm multiple of 8 sublanes, bkg sized so the A tile
+    (g·bkg·bn int8) + W tile stay within the VMEM budget (K_tile rule).
+    Shapes not divisible by blocks are padded by Pallas (zero padding is
+    exact here: code 0 decodes to all -1 trits but the padded A rows are 0).
+    """
+    m, kg = packed.shape
+    g_, kg_, n = a_r.shape
+    assert g_ == g and kg_ == kg, (packed.shape, a_r.shape, g)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bkg = min(bkg, kg)
+    nm, nn, nk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kg, bkg)
+
+    return pl.pallas_call(
+        functools.partial(_decode_gemm_kernel, g=g, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bkg), lambda i, j, k: (i, k)),
+            pl.BlockSpec((g, bkg, bn), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(packed, a_r)

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: paper-faithful streamed vector-LUT mpGeMM.
+
+Implements the Vec-LUT pipeline (paper Alg. 1 + §3.4) per VMEM tile:
+
+  1. *LUT precompute in VMEM*: the unified sub-table tile
+     T (3^g, bkg, bn) int16 = S(3^g, g) ⨯ A_r(g, bkg, bn), computed with one
+     MXU contraction against the compile-time sign-enumeration matrix S
+     (the TPU replacement for topological precompute — DESIGN.md §2).
+     T lives only in this grid step's VMEM: this is the paper's
+     "streamed precomputing-lookup execution" with VMEM as the cache.
+  2. *1→N vector lookup & accumulate*: every packed byte W[m, k] selects a
+     row T[idx, k, :] — a vector of bn token results — accumulated into the
+     revisited output block.
+
+Two lookup strategies (both faithful to "one 1→N lookup per index"):
+  * 'onehot' (default): the gather is expressed as a one-hot batched matmul
+    onehot(W)(bm, bkg, 3^g) ⨯ T(3^g, bkg, bn) on the MXU — TPU has no
+    cross-sublane vector gather, and one-hot contraction is the idiomatic
+    Mosaic lowering of a row-select.
+  * 'serial': literal row gather via a fori_loop of dynamic slices — the
+    closest transliteration of the CPU kernel's inner loop; sublane-serial
+    on real hardware (kept for fidelity comparison + ablation).
+
+VMEM budget per §4's K_tile rule (adapted): 3^g · bkg · bn · 2B for T —
+ops.select_tiles() sizes bkg so this stays ≲ 4 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+_R = 3
+
+
+def _vlut_kernel(w_ref, a_ref, o_ref, *, g: int, lookup: str):
+    """w_ref: (bm, bkg) uint8; a_ref: (g, bkg, bn) int8; o_ref: (bm, bn) i32."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bm, bkg = w_ref.shape
+    bn = o_ref.shape[1]
+    n_entries = _R ** g
+
+    # --- 1. streamed LUT precompute (unified across the bn tokens) --------
+    # Sign-enumeration matrix S[e, j] = trit_j(e) - 1, built in-kernel from
+    # iota (Pallas kernels cannot capture host constants).
+    e_iota = jax.lax.broadcasted_iota(jnp.int32, (n_entries, 1), 0)
+    s = jnp.concatenate(
+        [(e_iota // (_R ** j)) % _R - 1 for j in range(g)], axis=1
+    ).astype(jnp.int8)                                              # (3^g, g)
+    # T[e, k, n] = sum_j S[e, j] * A_r[j, k, n]
+    t = jax.lax.dot_general(
+        s, a_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.int16)                                             # (3^g, bkg, bn)
+
+    codes = w_ref[...].astype(jnp.int32)                            # (bm, bkg)
+
+    # --- 2. 1→N vector lookup + accumulate --------------------------------
+    if lookup == "onehot":
+        # onehot[m, k, e] ⨯ T[e, k, n] → batched over k: (bkg, bm, bn)
+        eye = jax.lax.broadcasted_iota(jnp.int32, (bm, bkg, n_entries), 2)
+        onehot = (eye == codes[:, :, None]).astype(jnp.int8)
+        part = jax.lax.dot_general(
+            onehot.transpose(1, 0, 2),                              # (bkg, bm, 3^g)
+            t.transpose(1, 0, 2),                                   # (bkg, 3^g, bn)
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )                                                           # (bkg, bm, bn)
+        o_ref[...] += jnp.sum(part, axis=0)
+    else:  # 'serial' — literal per-(m,k) row gather
+        def body_k(k, acc):
+            t_k = jax.lax.dynamic_slice(t, (0, k, 0), (n_entries, 1, bn))[:, 0, :]
+            rows = jnp.take(t_k, codes[:, k], axis=0)               # (bm, bn) 1→N
+            return acc + rows.astype(jnp.int32)
+
+        o_ref[...] += jax.lax.fori_loop(
+            0, bkg, body_k, jnp.zeros((bm, bn), jnp.int32)
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("g", "bm", "bn", "bkg", "lookup", "interpret")
+)
+def vlut_lookup_gemm(
+    packed: jax.Array,
+    a_r: jax.Array,
+    *,
+    g: int,
+    bm: int = 128,
+    bn: int = 128,
+    bkg: int = 32,
+    lookup: str = "onehot",
+    interpret: bool = False,
+) -> jax.Array:
+    """packed: (M, KG) uint8; a_r: (g, KG, N) int8 → (M, N) int32.
+
+    Callers (ops.py) must pre-pad M/N/KG to block multiples — padded K-groups
+    must carry the all-zero-trit code so they contribute 0.
+    """
+    m, kg = packed.shape
+    g_, kg_, n = a_r.shape
+    assert g_ == g and kg_ == kg, (packed.shape, a_r.shape, g)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bkg = min(bkg, kg)
+    nm, nn, nk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(kg, bkg)
+
+    return pl.pallas_call(
+        functools.partial(_vlut_kernel, g=g, lookup=lookup),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bkg), lambda i, j, k: (i, k)),
+            pl.BlockSpec((g, bkg, bn), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(packed, a_r)

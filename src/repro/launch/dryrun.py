@@ -1,0 +1,271 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512"
+    )
+# ^ MUST precede every other import (jax locks device count on first init).
+# Tests may pre-set a smaller count via XLA_FLAGS; production dry-run gets 512.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. constructs abstract state (eval_shape — ShapeDtypeStruct only, zero
+     allocation) with NamedShardings from repro.dist.sharding rules,
+  3. jits the right step (train_step for train_4k, prefill_step for
+     prefill_32k, serve/decode_step for decode_32k & long_500k),
+  4. .lower().compile() — proving the distribution config is coherent,
+  5. records memory_analysis / cost_analysis / parsed collective bytes into
+     a JSON results file consumed by EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+try:
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover
+    _zstd = None
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cell_is_applicable, get_config, list_archs
+from repro.dist.sharding import use_sharding_ctx
+from repro.launch.mesh import make_production_mesh, make_small_mesh
+from repro.launch.steps import (
+    abstract_cache,
+    abstract_serve_params,
+    abstract_train_state,
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.optim import AdamWConfig
+from repro.roofline.analysis import Roofline, count_params, model_flops
+from repro.roofline.hlo_stats import parse_hlo_stats
+
+
+def _per_device_bytes(tree) -> int:
+    total = 0
+    for l in jax.tree.leaves(tree):
+        if hasattr(l, "sharding") and l.sharding is not None:
+            shard_shape = l.sharding.shard_shape(l.shape)
+            n = 1
+            for d in shard_shape:
+                n *= d
+        else:
+            n = l.size
+        total += n * l.dtype.itemsize
+    return total
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _save_hlo(rec: dict, hlo: str) -> None:
+    """Persist compressed HLO so roofline analysis can be re-run offline
+    (results/reanalyze.py) without recompiling."""
+    if _zstd is None:
+        return
+    os.makedirs("results/hlo", exist_ok=True)
+    tag = rec.get("variant", "baseline")
+    if rec.get("overrides"):
+        import hashlib
+
+        tag += "-" + hashlib.md5(
+            json.dumps(rec["overrides"], sort_keys=True).encode()
+        ).hexdigest()[:8]
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}_{tag}.hlo.zst"
+    path = os.path.join("results/hlo", name)
+    with open(path, "wb") as f:
+        f.write(_zstd.ZstdCompressor(level=6).compress(hlo.encode()))
+    rec["hlo_path"] = path
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    small_mesh: bool = False,
+    verbose: bool = True,
+    variant: str = "baseline",
+    overrides: dict | None = None,
+) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if variant == "optimized":
+        # beyond-paper engine knobs validated in EXPERIMENTS.md §Perf
+        cfg = cfg.with_(cache_in_carry=True, moe_block_dispatch=True)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "overrides": overrides or {},
+        "mesh": ("small" if small_mesh else ("2x16x16" if multi_pod else "16x16")),
+    }
+    if not cell_is_applicable(arch, shape_name):
+        rec.update(status="skipped",
+                   reason="full-attention arch: long_500k N/A (DESIGN.md §4)")
+        return rec
+
+    t0 = time.time()
+    mesh = (
+        make_small_mesh(multi_pod=multi_pod) if small_mesh
+        else make_production_mesh(multi_pod=multi_pod)
+    )
+    chips = mesh.devices.size
+    # serving caches sized to the cell's sequence length
+    cfg = cfg.with_(max_cache_len=shape.seq_len)
+    enc_len = (
+        shape.seq_len // cfg.enc_frame_ratio if cfg.family == "encdec" else 0
+    )
+
+    try:
+        with mesh, use_sharding_ctx(mesh, cfg):
+            batch = input_specs(cfg, shape, mesh)
+            donate = (0,)  # train: donate state (params+opt updated in place)
+            if shape.kind == "train":
+                opt_cfg = AdamWConfig()
+                state = abstract_train_state(cfg, opt_cfg, mesh)
+                fn = make_train_step(cfg, opt_cfg)
+                args = (state, batch)
+                rec["state_bytes_per_device"] = _per_device_bytes(state)
+            elif shape.kind == "prefill":
+                params = abstract_serve_params(cfg, mesh)
+                cache = abstract_cache(
+                    cfg, mesh, shape.global_batch, shape.seq_len, enc_len
+                )
+                fn = make_prefill_step(cfg)
+                args = (params, cache, batch)
+                donate = (1,)  # serve: donate the cache (updated in place)
+                rec["state_bytes_per_device"] = _per_device_bytes(
+                    (params, cache)
+                )
+            else:  # decode
+                params = abstract_serve_params(cfg, mesh)
+                cache = abstract_cache(
+                    cfg, mesh, shape.global_batch, shape.seq_len, enc_len
+                )
+                fn = make_decode_step(cfg)
+                args = (params, cache, batch["tokens"])
+                donate = (1,)
+                rec["state_bytes_per_device"] = _per_device_bytes(
+                    (params, cache)
+                )
+
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+
+        cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+        _save_hlo(rec, hlo)
+        # cost_analysis counts while-body (lax.scan) ops ONCE → useless for
+        # scanned models; use the trip-count-aware HLO analyzer instead and
+        # keep XLA's numbers for reference.
+        stats = parse_hlo_stats(hlo)
+        rec["xla_cost_analysis"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+        }
+        rec["n_whiles"] = stats.n_whiles
+        rec["unknown_trip_whiles"] = stats.unknown_trip_whiles
+        n_total, n_active = count_params(cfg)
+        rl = Roofline(
+            arch=arch, shape=shape_name, mesh=rec["mesh"], chips=chips,
+            flops_per_device=stats.dot_flops,
+            bytes_per_device=stats.traffic_bytes,
+            coll_bytes_per_device=stats.collective_bytes,
+            coll_detail=stats.collectives,
+            model_flops_total=model_flops(cfg, shape, n_total, n_active),
+            min_bytes_per_device=float(rec.get("state_bytes_per_device", 0)),
+        )
+        rec.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            params_total=n_total,
+            params_active=n_active,
+            memory_analysis=_mem_analysis_dict(compiled),
+            roofline=rl.row(),
+            hlo_bytes=len(hlo),
+        )
+        if verbose:
+            ma = rec["memory_analysis"]
+            print(
+                f"[OK] {arch} × {shape_name} × {rec['mesh']}: "
+                f"compile={rec['compile_s']}s "
+                f"state/dev={rec.get('state_bytes_per_device', 0)/2**30:.2f}GiB "
+                f"temp/dev={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                f"dominant={rl.dominant} "
+                f"terms=({rl.compute_s:.4f},{rl.memory_s:.4f},"
+                f"{rl.collective_s:.4f})s frac={rl.roofline_fraction:.3f}"
+            )
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {arch} × {shape_name} × {rec['mesh']}: {e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--small-mesh", action="store_true",
+                    help="8-device mesh (CI sharding test)")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               small_mesh=args.small_mesh, variant=args.variant)
+                n_fail += rec["status"] == "error"
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

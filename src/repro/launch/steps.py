@@ -1,0 +1,162 @@
+"""Step builders (train / prefill / decode) + abstract state constructors.
+
+These are the functions the launcher jits and the dry-run lowers. All of them
+are traced inside `use_sharding_ctx(mesh, cfg)` so activation constraints
+resolve; inputs/outputs carry NamedShardings via ShapeDtypeStruct.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    param_shardings,
+    shard_act,
+)
+from repro.models import (
+    decode_step as model_decode,
+    encdec_init,
+    encdec_loss,
+    encode,
+    init_cache,
+    init_lm,
+    lm_loss,
+    pack_params,
+    prefill as model_prefill,
+)
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    is_encdec = cfg.family == "encdec"
+
+    def train_step(state, batch):
+        tokens = shard_act(batch["tokens"], "tokens")
+        labels = shard_act(batch["labels"], "tokens")
+
+        def loss_fn(params):
+            if is_encdec:
+                return encdec_loss(
+                    params, batch["frames"], tokens, labels, cfg, mode="train"
+                )
+            return lm_loss(params, tokens, labels, cfg, mode="train")
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"]
+        )
+        new_params, new_opt, om = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg
+        )
+        metrics = dict(metrics, loss=loss, **om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    is_encdec = cfg.family == "encdec"
+
+    def prefill_step(params, cache, batch):
+        tokens = shard_act(batch["tokens"], "tokens")
+        enc_out = None
+        if is_encdec:
+            enc_out = encode(params, batch["frames"], cfg, mode="serve")
+            dec_params = params["decoder"]
+        else:
+            dec_params = params
+        logits, new_cache = model_prefill(
+            dec_params, tokens, cache, cfg, mode="serve", enc_out=enc_out
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    is_encdec = cfg.family == "encdec"
+
+    def decode_step(params, cache, tokens):
+        dec_params = params["decoder"] if is_encdec else params
+        logits, new_cache = model_decode(dec_params, tokens, cache, cfg, mode="serve")
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# abstract state (eval_shape — no allocation) with shardings attached
+# --------------------------------------------------------------------------
+def _attach(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings,
+    )
+
+
+def _init_params_fn(cfg: ModelConfig):
+    rng = jax.random.PRNGKey(0)
+    if cfg.family == "encdec":
+        return lambda: encdec_init(rng, cfg)
+    return lambda: init_lm(rng, cfg)
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh):
+    params = jax.eval_shape(_init_params_fn(cfg))
+    opt = jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg), params)
+    return {
+        "params": _attach(params, param_shardings(params, mesh, cfg)),
+        "opt": _attach(opt, opt_shardings(opt, mesh, cfg)),
+    }
+
+
+def abstract_serve_params(cfg: ModelConfig, mesh):
+    init = _init_params_fn(cfg)
+    packed = jax.eval_shape(lambda: pack_params(init(), cfg))
+    return _attach(packed, param_shardings(packed, mesh, cfg))
+
+
+def abstract_cache(cfg: ModelConfig, mesh, batch: int, max_len: int, enc_len: int = 0):
+    cache = jax.eval_shape(
+        functools.partial(
+            init_cache, cfg, batch, max_len, dtype=jnp.bfloat16, enc_len=enc_len
+        )
+    )
+    return _attach(cache, cache_shardings(cache, mesh, cfg))
+
+
+# --------------------------------------------------------------------------
+# input specs per (arch × shape) — the dry-run's model inputs
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, s // cfg.enc_frame_ratio, cfg.d_model), jnp.bfloat16
+            )
+        return _attach(batch, batch_shardings(batch, mesh, cfg))
+    if shape.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, s // cfg.enc_frame_ratio, cfg.d_model), jnp.bfloat16
+            )
+        return _attach(batch, batch_shardings(batch, mesh, cfg))
+    # decode: one new token against a seq_len cache
+    batch = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    return _attach(batch, batch_shardings(batch, mesh, cfg))

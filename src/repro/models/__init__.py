@@ -1,0 +1,23 @@
+"""repro.models — composable model zoo (attention/MLA/SSD mixers, dense/MoE
+FFNs, enc-dec) with train (QAT) and serve (Vec-LUT packed) modes."""
+from .common import linear_apply, linear_init, rmsnorm_apply, rope
+from .decoder import (
+    compress_layout,
+    decode_step,
+    init_cache,
+    init_lm,
+    lm_hidden,
+    lm_logits,
+    lm_loss,
+    prefill,
+)
+from .encdec import encdec_init, encdec_loss, encode
+from .convert import pack_params, packed_param_bytes, param_count
+
+__all__ = [
+    "linear_apply", "linear_init", "rmsnorm_apply", "rope",
+    "compress_layout", "decode_step", "init_cache", "init_lm", "lm_hidden",
+    "lm_logits", "lm_loss", "prefill",
+    "encdec_init", "encdec_loss", "encode",
+    "pack_params", "packed_param_bytes", "param_count",
+]

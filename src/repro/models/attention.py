@@ -1,0 +1,268 @@
+"""Grouped-query attention with RoPE, sliding windows, ring KV caches, and an
+online-softmax chunked path for long sequences.
+
+Design notes
+  * Positions are explicit everywhere: masks derive from absolute positions
+    (`q_pos`, `kv_pos`), with `kv_pos == -1` marking invalid cache slots.
+    This makes sliding-window *ring* caches trivial (a gemma3 local layer
+    serving long_500k keeps only `window` slots) and makes sequence-parallel
+    decode work under pjit: the KV cache shards over its length axis and
+    XLA inserts the max/sum all-reduces of the distributed softmax.
+  * Chunked attention (lax.scan over KV chunks, running max/sum) bounds the
+    score tensor for 32k prefill; dense einsum below `attn_dense_max`.
+  * All projections are quantizable BitLinears (the paper's mpGeMM targets).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+
+from .common import (
+    Params,
+    linear_apply,
+    linear_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    rope,
+)
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Scaled dot-product attention over explicit positions
+# --------------------------------------------------------------------------
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    """(B, Sq, Skv) bool."""
+    m = kv_pos[:, None, :] >= 0
+    if causal:
+        m &= kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        m &= q_pos[:, :, None] - kv_pos[:, None, :] < window
+    return m
+
+
+def _scores(q, k, scale, softcap):
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def sdpa(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Skv, KV, D)
+    v: jax.Array,          # (B, Skv, KV, D)
+    q_pos: jax.Array,      # (B, Sq) int32
+    kv_pos: jax.Array,     # (B, Skv) int32, -1 = invalid slot
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    chunk: int = 512,
+    dense_max: int = 2048,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    scale = d ** -0.5
+
+    if k.shape[1] <= dense_max or k.shape[1] % chunk:
+        s = _scores(qg, k, scale, softcap)                       # (B,KV,G,Sq,Skv)
+        m = _mask(q_pos, kv_pos, causal, window)[:, None, None]
+        s = jnp.where(m, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+        return out.reshape(b, sq, h, dv)
+
+    # ---- online-softmax over KV chunks ----------------------------------
+    nc = k.shape[1] // chunk
+    k_c = k.reshape(b, nc, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, nc, chunk, kv, dv).transpose(1, 0, 2, 3, 4)
+    p_c = kv_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kc, vc, pc = xs
+        s = _scores(qg, kc, scale, softcap)                      # (B,KV,G,Sq,c)
+        msk = _mask(q_pos, pc, causal, window)[:, None, None]
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, kv, g, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, kv, g, sq), jnp.float32),
+        jnp.zeros((b, kv, g, sq, dv), jnp.float32),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(step, init, (k_c, v_c, p_c))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA layer
+# --------------------------------------------------------------------------
+def attn_init(rng, cfg, spec) -> Params:
+    rngs = jax.random.split(rng, 6)
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p: Params = {
+        "wq": linear_init(rngs[0], d, h * hd, cfg),
+        "wk": linear_init(rngs[1], d, kv * hd, cfg),
+        "wv": linear_init(rngs[2], d, kv * hd, cfg),
+        "wo": linear_init(rngs[3], h * hd, d, cfg),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def attn_cache_init(cfg, spec, batch: int, max_len: int, dtype) -> Params:
+    """Ring-buffer cache for windowed layers, full buffer otherwise."""
+    buf = min(spec.window, max_len) if spec.window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, buf, kv, hd), dtype),
+        "v": jnp.zeros((batch, buf, kv, hd), dtype),
+        "slot_pos": jnp.full((batch, buf), -1, jnp.int32),
+        # per-request write position → continuous batching mixes requests of
+        # different lengths in one decode batch.
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _project_qkv(p, x, cfg, spec, mode, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear_apply(p["wq"], x, cfg, mode).reshape(b, s, h, hd)
+    k = linear_apply(p["wk"], x, cfg, mode).reshape(b, s, kv, hd)
+    v = linear_apply(p["wv"], x, cfg, mode).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(p["k_norm"], k, cfg.norm_eps)
+    if spec.rope_theta:
+        q = rope(q, positions, spec.rope_theta)
+        k = rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def attn_apply(
+    p: Params,
+    x: jax.Array,
+    *,
+    cfg,
+    spec,
+    mode: str,
+    cache: Params | None = None,
+    causal: bool = True,
+) -> tuple[jax.Array, Params | None]:
+    """Self-attention. cache=None → pure (train/eval). Otherwise prefill
+    (S>1: fills cache from position cache.idx) or decode (S==1: appends)."""
+    b, s, _ = x.shape
+    start = cache["idx"] if cache is not None else jnp.zeros((b,), jnp.int32)
+    positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B,S)
+    q, k, v = _project_qkv(p, x, cfg, spec, mode, positions)
+
+    if cache is None:
+        if cfg.attn_impl == "flash":
+            from repro.kernels.flash_attention import flash_attention_trainable
+
+            out = flash_attention_trainable(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal, spec.window,
+                cfg.attn_logit_softcap, jax.default_backend() != "tpu",
+            ).transpose(0, 2, 1, 3)
+        else:
+            out = sdpa(
+                q, k, v, positions, positions,
+                causal=causal, window=spec.window,
+                softcap=cfg.attn_logit_softcap,
+                chunk=cfg.attn_chunk, dense_max=cfg.attn_dense_max,
+            )
+        new_cache = None
+    else:
+        buf = cache["k"].shape[1]
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        if s >= buf:
+            # prefill longer than the ring: keep the trailing `buf` tokens.
+            src = s - buf + jnp.arange(buf, dtype=jnp.int32)
+            dst = (start[:, None] + src[None, :]) % buf            # (B, buf)
+            ck = cache["k"].at[bidx, dst].set(k[:, src])
+            cv = cache["v"].at[bidx, dst].set(v[:, src])
+            sp = cache["slot_pos"].at[bidx, dst].set(positions[:, src])
+        else:
+            slots = positions % buf                                 # (B, S)
+            ck = cache["k"].at[bidx, slots].set(k)
+            cv = cache["v"].at[bidx, slots].set(v)
+            sp = cache["slot_pos"].at[bidx, slots].set(positions)
+        new_cache = {
+            "k": shard_act(ck, "kv_cache"),
+            "v": shard_act(cv, "kv_cache"),
+            "slot_pos": sp,
+            "idx": start + s,
+        }
+        if s == 1:
+            out = sdpa(
+                q, ck, cv, positions, sp,
+                causal=causal, window=spec.window,
+                softcap=cfg.attn_logit_softcap,
+                chunk=cfg.attn_chunk, dense_max=cfg.attn_dense_max,
+            )
+        else:
+            # prefill: attend within the incoming sequence itself.
+            out = sdpa(
+                q, k, v, positions, positions,
+                causal=causal, window=spec.window,
+                softcap=cfg.attn_logit_softcap,
+                chunk=cfg.attn_chunk, dense_max=cfg.attn_dense_max,
+            )
+    b_, s_, h, hd = out.shape
+    y = linear_apply(p["wo"], out.reshape(b_, s_, h * hd), cfg, mode)
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder layers)
+# --------------------------------------------------------------------------
+def cross_attn_init(rng, cfg) -> Params:
+    rngs = jax.random.split(rng, 4)
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": linear_init(rngs[0], d, h * hd, cfg),
+        "wk": linear_init(rngs[1], d, kv * hd, cfg),
+        "wv": linear_init(rngs[2], d, kv * hd, cfg),
+        "wo": linear_init(rngs[3], h * hd, d, cfg),
+    }
+
+
+def cross_attn_kv(p: Params, enc_out: jax.Array, cfg, mode: str):
+    b, se, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = linear_apply(p["wk"], enc_out, cfg, mode).reshape(b, se, kv, hd)
+    v = linear_apply(p["wv"], enc_out, cfg, mode).reshape(b, se, kv, hd)
+    return k, v
+
+
+def cross_attn_apply(p: Params, x, k, v, cfg, mode: str):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = linear_apply(p["wq"], x, cfg, mode).reshape(b, s, h, hd)
+    q_pos = jnp.zeros((b, s), jnp.int32)
+    kv_pos = jnp.zeros((b, k.shape[1]), jnp.int32)
+    out = sdpa(
+        q, k, v, q_pos, kv_pos, causal=False, window=0,
+        chunk=cfg.attn_chunk, dense_max=cfg.attn_dense_max,
+    )
+    return linear_apply(p["wo"], out.reshape(b, s, h * hd), cfg, mode)

@@ -1,0 +1,104 @@
+"""Transformer/SSM block assembly: pre-norm residual blocks whose token mixer
+and FFN are chosen by a LayerSpec (attn | mla | ssm × dense | moe | none,
+with optional cross-attention for enc-dec decoders)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attn_apply,
+    attn_cache_init,
+    attn_init,
+    cross_attn_apply,
+    cross_attn_init,
+    cross_attn_kv,
+)
+from .common import Params, rmsnorm_apply, rmsnorm_init
+from .mla import mla_apply, mla_cache_init, mla_init
+from .moe import dense_ffn_apply, dense_ffn_init, moe_apply, moe_init
+from .ssm import ssm_apply, ssm_cache_init, ssm_init
+
+
+def block_init(rng, cfg, spec) -> Params:
+    r = jax.random.split(rng, 4)
+    mixer_init = {"attn": attn_init, "mla": mla_init, "ssm": ssm_init}[spec.mixer]
+    p: Params = {
+        "mixer_norm": rmsnorm_init(cfg.d_model),
+        "mixer": mixer_init(r[0], cfg, spec),
+    }
+    if spec.cross_attn:
+        p["cross_norm"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = cross_attn_init(r[1], cfg)
+    if spec.ffn == "dense":
+        p["ffn_norm"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = dense_ffn_init(r[2], cfg, spec.d_ff or cfg.d_ff)
+    elif spec.ffn == "moe":
+        p["ffn_norm"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = moe_init(r[3], cfg)
+    return p
+
+
+def block_cache_init(cfg, spec, batch: int, max_len: int, dtype, enc_len: int = 0):
+    cache_init = {
+        "attn": attn_cache_init,
+        "mla": mla_cache_init,
+        "ssm": ssm_cache_init,
+    }[spec.mixer]
+    c = cache_init(cfg, spec, batch, max_len, dtype)
+    if spec.cross_attn:
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        c["xk"] = jnp.zeros((batch, enc_len, kv, hd), dtype)
+        c["xv"] = jnp.zeros((batch, enc_len, kv, hd), dtype)
+    return c
+
+
+def block_apply(
+    p: Params,
+    x: jax.Array,
+    *,
+    cfg,
+    spec,
+    mode: str,
+    cache: Params | None = None,
+    enc_out: jax.Array | None = None,
+    causal: bool = True,
+):
+    """→ (x, new_cache, aux_loss)."""
+    h = rmsnorm_apply(p["mixer_norm"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        y, new_cache = attn_apply(
+            p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache, causal=causal
+        )
+    elif spec.mixer == "mla":
+        y, new_cache = mla_apply(p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache)
+    else:
+        y, new_cache = ssm_apply(p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache)
+    x = x + y
+
+    if spec.cross_attn:
+        hc = rmsnorm_apply(p["cross_norm"], x, cfg.norm_eps)
+        if cache is not None:
+            if enc_out is not None:  # prefill: compute + store cross KV
+                xk, xv = cross_attn_kv(p["cross"], enc_out, cfg, mode)
+                new_cache = dict(new_cache or {})
+                new_cache["xk"], new_cache["xv"] = (
+                    xk.astype(cache["xk"].dtype), xv.astype(cache["xv"].dtype),
+                )
+            else:  # decode: reuse cached cross KV
+                new_cache = dict(new_cache or {})
+                new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+            xk, xv = new_cache["xk"], new_cache["xv"]
+        else:
+            xk, xv = cross_attn_kv(p["cross"], enc_out, cfg, mode)
+        x = x + cross_attn_apply(p["cross"], hc, xk, xv, cfg, mode)
+
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != "none":
+        hf = rmsnorm_apply(p["ffn_norm"], x, cfg.norm_eps)
+        if spec.ffn == "moe":
+            y, aux = moe_apply(p["ffn"], hf, cfg, mode)
+        else:
+            y = dense_ffn_apply(p["ffn"], hf, cfg, mode)
+        x = x + y
+    return x, new_cache, aux

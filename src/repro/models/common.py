@@ -1,0 +1,120 @@
+"""Shared model building blocks: linears (dense / QAT-ternary / packed-serve),
+RMSNorm, RoPE, embeddings.
+
+Parameter convention: plain nested dicts of arrays. A *quantizable* linear
+(one the paper's mpGeMM kernel serves) stores its dense weight under key
+``"qw"`` with shape (K_in, M_out); after `convert.pack_params` it becomes
+``{"pw": PackedWeight}`` (M_out, K_in packed). Non-quantized linears use key
+``"w"``. This makes train→serve conversion a pure pytree rewrite.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedWeight
+from repro.core.quantize import fake_act_quant, fake_ternary_cols
+from repro.kernels.ops import ternary_matmul
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# Linear
+# --------------------------------------------------------------------------
+def linear_init(rng, k_in: int, m_out: int, cfg, quant: bool = True) -> Params:
+    scale = 1.0 / (k_in ** 0.5)
+    w = jax.random.normal(rng, (k_in, m_out), jnp.float32) * scale
+    key = "qw" if (quant and cfg.quant == "ternary") else "w"
+    return {key: w.astype(_dtype(cfg))}
+
+
+def linear_apply(p: Params, x: jax.Array, cfg, mode: str) -> jax.Array:
+    """x: (..., K) → (..., M). mode: 'train' | 'eval' | 'serve'."""
+    if "pw" in p:  # packed serving path → the paper's kernel
+        return ternary_matmul(p["pw"], x)
+    if "qw" in p:
+        w = p["qw"]
+        if mode in ("train", "eval"):
+            # QAT: ternary weight fake-quant + per-token int8 activation STE.
+            wq = fake_ternary_cols(w).astype(x.dtype)
+            xq = fake_act_quant(x)
+            return xq @ wq
+        # mode == 'serve' but unconverted params: dense ternarized compute.
+        wq = fake_ternary_cols(w).astype(x.dtype)
+        return x @ wq
+    return x @ p["w"].astype(x.dtype)
+
+
+def linear_batched_apply(p: Params, x: jax.Array, cfg, mode: str) -> jax.Array:
+    """Batched expert linear: params have a leading E dim; x: (E, C, K)."""
+    if "pw" in p:
+        return jax.vmap(lambda pw, xe: ternary_matmul(pw, xe))(p["pw"], x)
+    key = "qw" if "qw" in p else "w"
+    w = p[key]
+    if key == "qw" and mode in ("train", "eval"):
+        wq = fake_ternary_cols(w)                       # (E, K, M), no transpose
+        return jnp.einsum("eck,ekm->ecm", fake_act_quant(x), wq.astype(x.dtype))
+    return jnp.einsum("eck,ekm->ecm", x, w.astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def gated_rmsnorm_apply(p: Params, x: jax.Array, gate: jax.Array, eps=1e-5):
+    """Mamba2's norm(x * silu(gate))."""
+    return rmsnorm_apply(p, x * jax.nn.silu(gate.astype(x.dtype)), eps)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)   # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs           # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding
+# --------------------------------------------------------------------------
+def embed_init(rng, vocab: int, d: int, cfg) -> Params:
+    return {"table": jax.random.normal(rng, (vocab, d), jnp.float32).astype(_dtype(cfg)) * 0.02}
+
+
+def embed_apply(p: Params, tokens: jax.Array, cfg) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.emb_scale_by_dim:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def head_apply(embed_params: Params, head_params: Params | None, x, cfg):
+    """Final logits; tied to the embedding table unless a head is present."""
+    if head_params is not None:
+        return linear_apply(head_params, x, cfg, mode="eval")
+    table = embed_params["table"]
+    return x @ table.T.astype(x.dtype)

@@ -1,0 +1,63 @@
+"""Offline weight transformation (paper §3.1 stage (i)).
+
+`pack_params` rewrites a trained/QAT parameter tree into the serving tree:
+every quantizable linear (key "qw", stored (K, M)) becomes a `PackedWeight`
+(ternary absmean quant → trit-code packing at 1.6/2.0 bpw, per-channel
+scales). Batched expert weights (leading E dim) pack along their last axis.
+The rewrite is a pure pytree transformation — the model code is identical in
+both modes (linear_apply dispatches on the key)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_weight
+from repro.core.quantize import ternary_quantize
+
+
+def pack_params(params, cfg):
+    def rec(node):
+        if isinstance(node, dict):
+            if "qw" in node:
+                w = jnp.swapaxes(node["qw"].astype(jnp.float32), -1, -2)  # (...,M,K)
+                tw = ternary_quantize(w, per_channel=True)
+                return {"pw": pack_weight(tw.values, tw.scale, mode=cfg.pack_mode)}
+            return {k: rec(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [rec(v) for v in node]
+            return type(node)(t) if isinstance(node, tuple) else t
+        return node
+
+    return rec(params)
+
+
+def packed_param_bytes(params) -> int:
+    """Total bytes of a (possibly packed) parameter tree."""
+    return sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(params)
+    )
+
+
+def param_count(params) -> int:
+    """Logical parameter count (packed uint8 leaves count as g weights each —
+    approximated via PackedWeight geometry during tree traversal)."""
+    from repro.core.packing import PackedWeight
+
+    total = 0
+
+    def rec(node):
+        nonlocal total
+        if isinstance(node, PackedWeight):
+            total += node.M * node.K + node.scale.size
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                rec(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                rec(v)
+        else:
+            total += node.size
+
+    rec(params)
+    return total

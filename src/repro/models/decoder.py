@@ -1,0 +1,301 @@
+"""Staged decoder-only LM.
+
+Heterogeneous layer stacks compress into *stages*: maximal runs of a repeated
+LayerSpec pattern. Each stage lowers to ONE lax.scan over its stacked
+parameters (with optional remat), so a 72-layer jamba (period-8 pattern) or a
+61-layer deepseek (3 dense + 58 MoE) compiles a handful of layer bodies
+instead of n_layers copies — essential to keep the multi-pod dry-run HLO
+small and compile times sane.
+
+The final cross-entropy is computed in sequence chunks (never materializing
+the full (B, S, V) logits — vocab 202k/262k archs would otherwise OOM), with
+the vocab dimension shardable over the `model` mesh axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+
+from .blocks import block_apply, block_cache_init, block_init
+from .common import (
+    Params,
+    embed_apply,
+    embed_init,
+    linear_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+
+
+# --------------------------------------------------------------------------
+# Layout compression
+# --------------------------------------------------------------------------
+def compress_layout(specs: Sequence, max_period: int = 8) -> list[tuple[tuple, int]]:
+    """Greedy factorization of the layer list into (pattern, repeats) runs."""
+    stages: list[tuple[tuple, int]] = []
+    i, n = 0, len(specs)
+    while i < n:
+        best_p, best_r = 1, 1
+        for p in range(1, min(max_period, n - i) + 1):
+            r = 1
+            while (
+                i + (r + 1) * p <= n
+                and tuple(specs[i + r * p : i + (r + 1) * p]) == tuple(specs[i : i + p])
+            ):
+                r += 1
+            if r * p > best_p * best_r or (r * p == best_p * best_r and p < best_p):
+                best_p, best_r = p, r
+        stages.append((tuple(specs[i : i + best_p]), best_r))
+        i += best_p * best_r
+    return stages
+
+
+# --------------------------------------------------------------------------
+# Stage init / apply
+# --------------------------------------------------------------------------
+def _stage_init(rng, cfg, pattern, reps: int) -> Params:
+    out: Params = {}
+    for pos, spec in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(rng, pos), reps)
+        out[f"b{pos}"] = jax.vmap(lambda k: block_init(k, cfg, spec))(keys)
+    return out
+
+
+def _stage_cache_init(cfg, pattern, reps, batch, max_len, dtype, enc_len):
+    out = {}
+    for pos, spec in enumerate(pattern):
+        c1 = block_cache_init(cfg, spec, batch, max_len, dtype, enc_len)
+        out[f"b{pos}"] = jax.tree.map(
+            lambda l: jnp.repeat(l[None], reps, axis=0), c1
+        )
+    return out
+
+
+def _stage_apply(
+    stage_params: Params,
+    x: jax.Array,
+    aux: jax.Array,
+    *,
+    cfg,
+    pattern,
+    mode: str,
+    cache: Params | None,
+    enc_out: jax.Array | None,
+    causal: bool,
+):
+    has_cache = cache is not None
+    carry_cache = has_cache and cfg.cache_in_carry
+
+    def _ckpt(fn):
+        if not cfg.remat:
+            return fn
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots" else None
+        )
+        return jax.checkpoint(fn, prevent_cse=False, policy=policy)
+
+    if carry_cache:
+        # Cache lives in the scan CARRY and is updated in place per layer
+        # (dynamic_update_slice on the stacked buffer). XLA keeps the carry
+        # buffer resident → decode touches each cache byte ~once instead of
+        # the read-xs/write-ys double traffic (+copies) of the ys form.
+        reps = jax.tree.leaves(stage_params)[0].shape[0]
+
+        def body_c(carry, xs):
+            x, aux, cache_full = carry
+            p_rep, li = xs
+            new_cache_rep = {}
+            for i, spec in enumerate(pattern):
+                c = jax.tree.map(
+                    lambda l: jax.lax.dynamic_index_in_dim(l, li, 0, keepdims=False),
+                    cache_full[f"b{i}"],
+                )
+                x, nc, a = block_apply(
+                    p_rep[f"b{i}"], x, cfg=cfg, spec=spec, mode=mode,
+                    cache=c, enc_out=enc_out, causal=causal,
+                )
+                x = shard_act(x, "btd")
+                aux = aux + a
+                new_cache_rep[f"b{i}"] = nc
+            cache_full = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), li, 0
+                ),
+                cache_full, new_cache_rep,
+            )
+            return (x, aux, cache_full), None
+
+        body_fn = _ckpt(body_c)
+        (x, aux, new_cache), _ = jax.lax.scan(
+            body_fn, (x, aux, cache), (stage_params, jnp.arange(reps))
+        )
+        return x, aux, new_cache
+
+    def body(carry, xs):
+        x, aux = carry
+        p_rep = xs[0]
+        cache_rep = xs[1] if has_cache else None
+        new_cache_rep = {}
+        for i, spec in enumerate(pattern):
+            c = cache_rep[f"b{i}"] if has_cache else None
+            x, nc, a = block_apply(
+                p_rep[f"b{i}"], x, cfg=cfg, spec=spec, mode=mode,
+                cache=c, enc_out=enc_out, causal=causal,
+            )
+            x = shard_act(x, "btd")
+            aux = aux + a
+            if has_cache:
+                new_cache_rep[f"b{i}"] = nc
+        return (x, aux), (new_cache_rep if has_cache else None)
+
+    body = _ckpt(body)
+    xs = (stage_params, cache) if has_cache else (stage_params,)
+    (x, aux), new_cache = jax.lax.scan(body, (x, aux), xs)
+    return x, aux, new_cache
+
+
+# --------------------------------------------------------------------------
+# Full model
+# --------------------------------------------------------------------------
+def init_lm(rng, cfg) -> Params:
+    specs = cfg.layer_specs()
+    stages = compress_layout(specs)
+    p: Params = {
+        "embed": embed_init(jax.random.fold_in(rng, 0), cfg.vocab, cfg.d_model, cfg),
+        "stages": [
+            _stage_init(jax.random.fold_in(rng, 100 + si), cfg, pat, reps)
+            for si, (pat, reps) in enumerate(stages)
+        ],
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = linear_init(
+            jax.random.fold_in(rng, 1), cfg.d_model, cfg.vocab, cfg, quant=False
+        )
+    return p
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, enc_len: int = 0):
+    stages = compress_layout(cfg.layer_specs())
+    return [
+        _stage_cache_init(cfg, pat, reps, batch, max_len, dtype, enc_len)
+        for (pat, reps) in stages
+    ]
+
+
+def lm_hidden(
+    params: Params,
+    inputs: jax.Array,
+    cfg,
+    *,
+    mode: str = "train",
+    cache: list | None = None,
+    enc_out: jax.Array | None = None,
+    causal: bool = True,
+):
+    """inputs: int32 tokens (B, S) or pre-embedded (B, S, d) (stub frontends).
+    → (hidden (B,S,d), new_cache, aux_loss)."""
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = embed_apply(params["embed"], inputs, cfg)
+    else:
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+    x = shard_act(x, "btd")
+    aux = jnp.zeros((), jnp.float32)
+    stages = compress_layout(cfg.layer_specs())
+    new_cache = []
+    for si, (pat, reps) in enumerate(stages):
+        c = cache[si] if cache is not None else None
+        x, aux, nc = _stage_apply(
+            params["stages"][si], x, aux, cfg=cfg, pattern=pat, mode=mode,
+            cache=c, enc_out=enc_out, causal=causal,
+        )
+        new_cache.append(nc)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, (new_cache if cache is not None else None), aux
+
+
+def _head_matmul(params: Params, h: jax.Array, cfg) -> jax.Array:
+    if "head" in params:
+        return h.astype(jnp.float32) @ params["head"]["w"].astype(jnp.float32)
+    return h.astype(jnp.float32) @ params["embed"]["table"].T.astype(jnp.float32)
+
+
+def lm_logits(params: Params, h: jax.Array, cfg) -> jax.Array:
+    """Full logits — use only for small S (serving reads the last position)."""
+    return _head_matmul(params, h, cfg)
+
+
+def lm_loss(
+    params: Params,
+    tokens: jax.Array,
+    labels: jax.Array,
+    cfg,
+    *,
+    mode: str = "train",
+    enc_out: jax.Array | None = None,
+    loss_mask: jax.Array | None = None,
+):
+    """Chunked softmax cross-entropy. → (loss, metrics dict)."""
+    h, _, aux = lm_hidden(params, tokens, cfg, mode=mode, enc_out=enc_out)
+    b, s, d = h.shape
+    chunk = min(cfg.loss_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        loss_mask = jnp.pad(
+            loss_mask if loss_mask is not None else jnp.ones((b, s), jnp.float32),
+            ((0, 0), (0, pad)),
+        )
+    elif loss_mask is None:
+        loss_mask = jnp.ones((b, s), jnp.float32)
+    nc = (s + pad) // chunk
+    h_c = h.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    y_c = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    m_c = loss_mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        hc, yc, mc = xs
+        logits = shard_act(_head_matmul(params, hc, cfg), "btv")    # (B,c,V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((logz - ll) * mc)
+        cnt = cnt + jnp.sum(mc)
+        return (tot, cnt), None
+
+    step_fn = jax.checkpoint(step, prevent_cse=False) if cfg.remat else step
+    (tot, cnt), _ = jax.lax.scan(
+        step_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (h_c, y_c, m_c),
+    )
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "tokens": cnt}
+
+
+# --------------------------------------------------------------------------
+# Serving entry points
+# --------------------------------------------------------------------------
+def prefill(params, tokens, cache, cfg, *, mode="serve", enc_out=None, causal=True):
+    """Run the prompt through the model, filling the cache.
+    → (last-position logits (B, V), new_cache)."""
+    h, new_cache, _ = lm_hidden(
+        params, tokens, cfg, mode=mode, cache=cache, enc_out=enc_out, causal=causal
+    )
+    logits = _head_matmul(params, h[:, -1:, :], cfg)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params, tokens, cache, cfg, *, mode="serve"):
+    """One decode step. tokens: (B, 1) int32 (or (B,1,d) embeds).
+    → (logits (B, V), new_cache)."""
+    h, new_cache, _ = lm_hidden(params, tokens, cfg, mode=mode, cache=cache)
+    logits = _head_matmul(params, h[:, -1:, :], cfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,170 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill use the naive expansion (latents → per-head K/V). Decode uses
+the *absorbed* formulation: the cache stores only the 512-dim compressed
+latent + 64-dim decoupled RoPE key per token (576 dims ≈ 4.5× smaller than
+GQA kv=128 would need), and W_UK/W_UV are folded into the query/output
+projections — the production trick that makes decode_32k at batch 128 cheap.
+
+All five projections (wq_a, wq_b, wkv_a, wkv_b, wo) are quantizable
+BitLinears served by the Vec-LUT packed kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+
+from .common import (
+    Params,
+    linear_apply,
+    linear_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    rope,
+)
+from .attention import sdpa
+
+
+def _dims(cfg):
+    m = cfg.mla
+    return m.q_lora_rank, m.kv_lora_rank, m.qk_nope_dim, m.qk_rope_dim, m.v_dim
+
+
+def mla_init(rng, cfg, spec) -> Params:
+    ql, kvl, nope, rp, vd = _dims(cfg)
+    h, d = cfg.n_heads, cfg.d_model
+    r = jax.random.split(rng, 5)
+    return {
+        "wq_a": linear_init(r[0], d, ql, cfg),
+        "q_norm": rmsnorm_init(ql),
+        "wq_b": linear_init(r[1], ql, h * (nope + rp), cfg),
+        "wkv_a": linear_init(r[2], d, kvl + rp, cfg),
+        "kv_norm": rmsnorm_init(kvl),
+        "wkv_b": linear_init(r[3], kvl, h * (nope + vd), cfg),
+        "wo": linear_init(r[4], h * vd, d, cfg),
+    }
+
+
+def mla_cache_init(cfg, spec, batch: int, max_len: int, dtype) -> Params:
+    _, kvl, _, rp, _ = _dims(cfg)
+    return {
+        "ckv": jnp.zeros((batch, max_len, kvl), dtype),
+        "krope": jnp.zeros((batch, max_len, rp), dtype),
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _latents(p, x, cfg, mode, positions):
+    """→ (q_nope, q_rope, ckv_normed, k_rope) with RoPE applied."""
+    ql, kvl, nope, rp, vd = _dims(cfg)
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = linear_apply(p["wq_b"], rmsnorm_apply(p["q_norm"],
+        linear_apply(p["wq_a"], x, cfg, mode), cfg.norm_eps), cfg, mode)
+    q = q.reshape(b, s, h, nope + rp)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv_a = linear_apply(p["wkv_a"], x, cfg, mode)
+    ckv = rmsnorm_apply(p["kv_norm"], kv_a[..., :kvl], cfg.norm_eps)
+    k_rope = kv_a[..., kvl:][:, :, None, :]                          # (B,S,1,rp)
+    q_rope = rope(q_rope, positions, spec_theta(cfg))
+    k_rope = rope(k_rope, positions, spec_theta(cfg))[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def spec_theta(cfg):
+    return 10_000.0
+
+
+def _wkv_b_dense(p, cfg, dtype):
+    """Dense (kvl, H, nope+vd) view of wkv_b — unpacked transiently for the
+    absorbed decode einsums (weight ≪ KV traffic at decode)."""
+    ql, kvl, nope, rp, vd = _dims(cfg)
+    h = cfg.n_heads
+    if "pw" in p["wkv_b"]:
+        pw = p["wkv_b"]["pw"]
+        w_scale = pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))
+        w = (pw.unpack().astype(jnp.float32) * w_scale[:, None]).T   # (kvl, M)
+    elif "qw" in p["wkv_b"]:
+        # mirror the QAT fake-ternary numerics of the naive (prefill) path
+        from repro.core.quantize import fake_ternary_cols
+
+        w = fake_ternary_cols(p["wkv_b"]["qw"]).astype(jnp.float32)  # (kvl, M)
+    else:
+        w = p["wkv_b"]["w"].astype(jnp.float32)                      # (kvl, M)
+    return w.reshape(kvl, h, nope + vd).astype(dtype)
+
+
+def _expand_kv(p, ckv, cfg, mode):
+    ql, kvl, nope, rp, vd = _dims(cfg)
+    b, s, _ = ckv.shape
+    h = cfg.n_heads
+    kv = linear_apply(p["wkv_b"], ckv, cfg, mode).reshape(b, s, h, nope + vd)
+    return kv[..., :nope], kv[..., nope:]                            # k_nope, v
+
+
+def mla_apply(
+    p: Params,
+    x: jax.Array,
+    *,
+    cfg,
+    spec,
+    mode: str,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    ql, kvl, nope, rp, vd = _dims(cfg)
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    start = cache["idx"] if cache is not None else jnp.zeros((b,), jnp.int32)
+    positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q_nope, q_rope, ckv, k_rope = _latents(p, x, cfg, mode, positions)
+
+    new_cache = None
+    if cache is not None:
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        slots = positions                                             # full buffer
+        new_cache = {
+            "ckv": shard_act(
+                cache["ckv"].at[bidx, slots].set(ckv.astype(cache["ckv"].dtype)),
+                "kv_cache",
+            ),
+            "krope": shard_act(
+                cache["krope"].at[bidx, slots].set(k_rope.astype(cache["krope"].dtype)),
+                "kv_cache",
+            ),
+            "idx": start + s,
+        }
+
+    if cache is not None and s == 1:
+        # ---- absorbed decode over the latent cache -----------------------
+        wkv_b = _wkv_b_dense(p, cfg, jnp.float32)                    # (kvl,H,nope+vd)
+        w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+        ckv_all = new_cache["ckv"].astype(jnp.float32)               # (B,L,kvl)
+        krope_all = new_cache["krope"].astype(jnp.float32)           # (B,L,rp)
+        q_eff = jnp.einsum("bqhd,khd->bqhk", q_nope.astype(jnp.float32), w_uk)
+        scale = (nope + rp) ** -0.5
+        scores = (
+            jnp.einsum("bqhk,bsk->bhqs", q_eff, ckv_all)
+            + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), krope_all)
+        ) * scale
+        kv_pos = jnp.arange(ckv_all.shape[1], dtype=jnp.int32)[None, :]
+        valid = kv_pos <= positions[:, :1]                           # (B,L)
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        lat = jnp.einsum("bhqs,bsk->bqhk", probs, ckv_all)
+        out = jnp.einsum("bqhk,khv->bqhv", lat, w_uv)                # (B,1,H,vd)
+    else:
+        # ---- naive expansion (train / prefill) ---------------------------
+        k_nope, v = _expand_kv(p, ckv, cfg, mode)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rp))], axis=-1
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = sdpa(
+            q, k.astype(q.dtype), v.astype(q.dtype), positions, positions,
+            causal=True, window=0, chunk=cfg.attn_chunk,
+            dense_max=cfg.attn_dense_max,
+        )
+    y = linear_apply(p["wo"], out.reshape(b, s, h * vd).astype(x.dtype), cfg, mode)
+    return y, new_cache

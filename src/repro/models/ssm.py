@@ -1,0 +1,193 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan for train/prefill,
+O(1)-state recurrence for decode.
+
+Implementation follows the Mamba2 paper's "minimal SSD" formulation with a
+sequential lax.scan over chunks (the inter-chunk recurrence is sequential
+anyway); per-chunk intra attention-like term is (B, H, Q, Q) with Q=chunk.
+All decays are exp of non-positive numbers → numerically safe.
+
+in_proj / out_proj are quantizable BitLinears (the paper's mpGeMM applies to
+SSM architectures through these projections — DESIGN.md §4: the technique is
+attention-agnostic). Conv and the scan itself stay in bf16/fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+
+from .common import Params, gated_rmsnorm_apply, linear_apply, linear_init, rmsnorm_init
+
+
+def _sc(cfg):
+    return cfg.ssm
+
+
+def ssm_init(rng, cfg, spec) -> Params:
+    sc = _sc(cfg)
+    d = cfg.d_model
+    di, n, h, p_, g = sc.d_inner, sc.d_state, sc.n_heads, sc.head_dim, sc.n_groups
+    conv_ch = di + 2 * g * n
+    r = jax.random.split(rng, 5)
+    dt = jnp.exp(
+        jax.random.uniform(r[2], (h,), jnp.float32)
+        * (jnp.log(sc.dt_max) - jnp.log(sc.dt_min))
+        + jnp.log(sc.dt_min)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": linear_init(r[0], d, 2 * di + 2 * g * n + h, cfg),
+        "conv_w": jax.random.normal(r[1], (sc.d_conv, conv_ch), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": rmsnorm_init(di),
+        "out_proj": linear_init(r[3], di, d, cfg),
+    }
+
+
+def ssm_cache_init(cfg, spec, batch: int, max_len: int, dtype) -> Params:
+    sc = _sc(cfg)
+    conv_ch = sc.d_inner + 2 * sc.n_groups * sc.d_state
+    return {
+        "conv": jnp.zeros((batch, sc.d_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, sc.n_heads, sc.head_dim, sc.d_state), jnp.float32),
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, hist: jax.Array | None):
+    """Depthwise causal conv1d. x: (B,S,ch); w: (K,ch); hist: (B,K-1,ch)."""
+    kk = w.shape[0]
+    if hist is None:
+        hist = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    s = x.shape[1]
+    acc = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(kk):  # d_conv = 4 → static unroll
+        acc = acc + xp[:, k : k + s].astype(jnp.float32) * w[k]
+    out = jax.nn.silu(acc + b)
+    new_hist = xp[:, s:] if s >= kk - 1 else jnp.concatenate([hist[:, s:], x], axis=1)
+    return out.astype(x.dtype), new_hist
+
+
+def _split_zxbcdt(zxbcdt, sc):
+    di, g, n, h = sc.d_inner, sc.n_groups, sc.d_state, sc.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _ssd_chunked(x, dt, a, b_mat, c_mat, chunk, h_init):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b_mat/c_mat: (B,S,H,N) (group-
+    broadcast). Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    bsz, s, h, p_ = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // q
+
+    def chunkify(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xc, dtc, bc, cc = map(chunkify, (x, dt, b_mat, c_mat))
+
+    def step(h_prev, xs):
+        x_q, dt_q, b_q, c_q = xs                     # (B,Q,H,P), (B,Q,H), (B,Q,H,N)
+        da = dt_q * a                                 # (B,Q,H) ≤ 0
+        dacs = jnp.cumsum(da, axis=1)
+        # inter: contribution of carried state
+        y_inter = jnp.einsum(
+            "bqhn,bhpn,bqh->bqhp", c_q.astype(jnp.float32), h_prev,
+            jnp.exp(dacs),
+        )
+        # intra: masked attention-like term
+        decay = jnp.exp(dacs[:, :, None, :] - dacs[:, None, :, :])   # (B,Qi,Qj,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        att = (
+            jnp.einsum("bihn,bjhn->bijh", c_q.astype(jnp.float32), b_q.astype(jnp.float32))
+            * decay
+            * dt_q[:, None, :, :]
+        )
+        att = jnp.where(mask[None, :, :, None], att, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, x_q.astype(jnp.float32))
+        # state update
+        da_tot = dacs[:, -1, :]                                      # (B,H)
+        decay_end = jnp.exp(da_tot[:, None, :] - dacs)               # (B,Q,H)
+        h_new = h_prev * jnp.exp(da_tot)[:, :, None, None] + jnp.einsum(
+            "bqhn,bqhp,bqh->bhpn",
+            b_q.astype(jnp.float32), x_q.astype(jnp.float32), decay_end * dt_q,
+        )
+        return h_new, (y_inter + y_intra).astype(x_q.dtype)
+
+    h_fin, yc = jax.lax.scan(step, h_init, (xc, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, s + pad, h, p_)
+    return y[:, :s], h_fin
+
+
+def ssm_apply(
+    p: Params,
+    u: jax.Array,
+    *,
+    cfg,
+    spec,
+    mode: str,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    sc = _sc(cfg)
+    bsz, s, _ = u.shape
+    di, n, h, p_, g = sc.d_inner, sc.d_state, sc.n_heads, sc.head_dim, sc.n_groups
+    zxbcdt = linear_apply(p["in_proj"], u, cfg, mode)
+    z, xbc, dt_raw = _split_zxbcdt(zxbcdt, sc)
+    a = -jnp.exp(p["A_log"])                                          # (H,) < 0
+
+    hist = cache["conv"].astype(xbc.dtype) if cache is not None else None
+    xbc, new_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"], hist)
+    x = xbc[..., :di].reshape(bsz, s, h, p_)
+    b_mat = xbc[..., di : di + g * n].reshape(bsz, s, g, n)
+    c_mat = xbc[..., di + g * n :].reshape(bsz, s, g, n)
+    rep = h // g
+    b_h = jnp.repeat(b_mat, rep, axis=2)                              # (B,S,H,N)
+    c_h = jnp.repeat(c_mat, rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+
+    if cache is not None and s == 1:
+        # ---- recurrent decode --------------------------------------------
+        h_prev = cache["state"]
+        da = jnp.exp(dt[:, 0] * a)                                    # (B,H)
+        upd = jnp.einsum(
+            "bhn,bhp,bh->bhpn",
+            b_h[:, 0].astype(jnp.float32), x[:, 0].astype(jnp.float32), dt[:, 0],
+        )
+        h_new = h_prev * da[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", c_h[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None]                                                # (B,1,H,P)
+        h_fin = h_new
+    else:
+        h_init = (
+            cache["state"] if cache is not None
+            else jnp.zeros((bsz, h, p_, n), jnp.float32)
+        )
+        y, h_fin = _ssd_chunked(x, dt, a, b_h, c_h, sc.chunk, h_init)
+
+    y = y.astype(u.dtype) + x * p["D"][:, None].astype(u.dtype)
+    y = y.reshape(bsz, s, di)
+    y = gated_rmsnorm_apply(p["norm"], y, z, cfg.norm_eps)
+    out = linear_apply(p["out_proj"], y, cfg, mode)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "conv": new_hist.astype(cache["conv"].dtype),
+            "state": shard_act(h_fin, "ssm_state"),
+            "idx": cache["idx"] + s,
+        }
+    return out, new_cache

@@ -1,0 +1,16 @@
+"""repro.optim — AdamW (+ blockwise-int8 states), schedules, grad compression."""
+from .adamw import (
+    AdamWConfig,
+    QTensor,
+    adamw_init,
+    adamw_update,
+    dequantize_blockwise,
+    global_norm,
+    lr_at,
+    quantize_blockwise,
+)
+
+__all__ = [
+    "AdamWConfig", "QTensor", "adamw_init", "adamw_update",
+    "dequantize_blockwise", "global_norm", "lr_at", "quantize_blockwise",
+]

@@ -1,0 +1,160 @@
+"""AdamW with optional int8 moment quantization.
+
+The int8 states (linear absmax quantization per last-axis row — shape-
+preserving, so the quantized state inherits the parameter's NamedSharding
+without reshapes/resharding) cut optimizer memory from 8 B/param (fp32 m+v)
+to ~2+ B/param — the difference between deepseek-v3-671b fitting on a
+512×16GiB slice or not (DESIGN.md §6). Small leaves (norms, scales, biases
+< 4096 elts) stay fp32; numerics tests bound the induced error per step.
+
+(A flattened bitsandbytes-style block layout was tried first and rejected:
+the flat int8 buffer cannot inherit the param sharding, and XLA SPMD falls
+back to "involuntary full rematerialization" on every moment reshape —
+see EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SMALL = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    int8_state: bool = True
+    # schedule
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QTensor:
+    """Blockwise int8 tensor: q int8 (padded flat), scale f32 per block.
+    `shape` (the logical unquantized shape) is static aux data."""
+    q: jax.Array      # int8, same shape as the source tensor
+    scale: jax.Array  # f32, shape[:-1] (absmax per last-axis row)
+    shape: tuple
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("q"), self.q), (ga("scale"), self.scale)), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux[0])
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+
+def quantize_blockwise(x: jax.Array) -> QTensor:
+    """Shape-preserving int8 quantization, absmax per last-axis row."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale, tuple(x.shape))
+
+
+def dequantize_blockwise(t: QTensor) -> jax.Array:
+    return t.q.astype(jnp.float32) * t.scale[..., None]
+
+
+def _maybe_q(x: jax.Array, enable: bool):
+    if enable and x.size >= SMALL:
+        return quantize_blockwise(x)
+    return x.astype(jnp.float32)
+
+
+def _maybe_dq(x):
+    return dequantize_blockwise(x) if isinstance(x, QTensor) else x
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    """m: int8 (first moment tolerates linear quantization), v: bf16 (the
+    second moment's dynamic range within a row breaks int8 absmax — verified
+    by the divergence study in tests/test_optim.py). ≈3 B/param total."""
+    def m_like(x):
+        return _maybe_q(jnp.zeros(x.shape, jnp.float32), cfg.int8_state)
+
+    def v_like(x):
+        if cfg.int8_state and x.size >= SMALL:
+            return jnp.zeros(x.shape, jnp.bfloat16)
+        return jnp.zeros(x.shape, jnp.float32)
+
+    return {
+        "m": jax.tree.map(m_like, params),
+        "v": jax.tree.map(v_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    """→ (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    is_q = lambda n: isinstance(n, QTensor)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        v_dtype = v.dtype
+        m = _maybe_dq(m)
+        v = v.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, _maybe_q(m, cfg.int8_state), v.astype(v_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(opt_state["m"], is_leaf=is_q)[0]
+    flat_v = jax.tree.flatten(opt_state["v"], is_leaf=is_q)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return (
+        new_p,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

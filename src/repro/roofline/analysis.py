@@ -1,0 +1,203 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three-term model per (arch × shape × mesh), TPU v5e constants:
+    compute_s    = HLO_FLOPs_per_device / 197e12        (bf16 MXU peak)
+    memory_s     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+    collective_s = collective_bytes_per_device / 50e9   (per-link ICI)
+
+`compiled.cost_analysis()` runs on the *post-SPMD per-device* module, so its
+flops/bytes are already per-chip. Collective bytes are NOT in cost_analysis —
+we parse the optimized HLO text and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(shapes there are per-device too).
+
+MODEL_FLOPS uses 6·N·D (train) or 2·N·D (single forward) with N = active
+params, so the ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/
+redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one HLO shape like 'f32[8,128]' (scalars: 'f32[]')."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Sum result-shape bytes per collective kind from optimized HLO text."""
+    out: dict[str, dict[str, float]] = {
+        k: {"bytes": 0, "count": 0} for k in _COLLECTIVES
+    }
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # e.g. %all-reduce.1 = f32[8,16]{1,0} all-reduce(...)
+        #      %ag = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) all-gather(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(.*?\)|\S+)\s+([\w-]+)", line)
+        if not m:
+            continue
+        shapes_str, op = m.groups()
+        kind = next(
+            (k for k in _COLLECTIVES if op == k or op.startswith(k + ".")), None
+        )
+        if kind is None:
+            continue
+        if op.endswith("-start"):
+            kind = next((k for k in _COLLECTIVES if op.startswith(k)), kind)
+        if shapes_str.startswith("("):
+            shapes = re.findall(r"(\w+\[[\d,]*\])(?:\{[^}]*\})?", shapes_str)
+            total = sum(_shape_bytes(s) for s in shapes)
+        else:
+            total = _shape_bytes(shapes_str.split("{")[0])
+        out[kind]["bytes"] += total
+        out[kind]["count"] += 1
+    # async pairs (-start/-done) would double count; the regex above only
+    # matches ops whose NAME starts with the kind, and -done ops return the
+    # same tuple — halve if both forms present is handled by matching `=`
+    # result of -start only (the -done result repeats); accept small overcount.
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_detail: dict = field(default_factory=dict)
+    model_flops_total: float = 0.0
+    min_bytes_per_device: float = 0.0  # irreducible state traffic (params+cache)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def memory_efficiency(self) -> float:
+        """irreducible state bytes / actual HLO bytes — the score for
+        memory-bound (decode) cells where MFU is ~0 by construction."""
+        return (
+            self.min_bytes_per_device / self.bytes_per_device
+            if self.bytes_per_device else 0.0
+        )
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / achievable step time (the score)."""
+        if self.bound_s == 0:
+            return 0.0
+        useful_s = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        return useful_s / self.bound_s
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_efficiency": self.memory_efficiency,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def model_flops(cfg, shape, n_params_total: int, n_params_active: int) -> float:
+    """6·N·D for train, 2·N·D for a single forward (prefill/decode step)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the abstract init (no alloc)."""
+    import jax
+
+    from repro.launch.steps import _init_params_fn
+
+    params = jax.eval_shape(_init_params_fn(cfg))
+    total = active = 0
+
+    def walk(node, in_experts):
+        nonlocal total, active
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, in_experts or k == "experts")
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v, in_experts)
+        elif hasattr(node, "size"):
+            total += node.size
+            if in_experts and cfg.moe is not None:
+                mc = cfg.moe
+                active += int(node.size * mc.top_k / mc.n_experts)
+            else:
+                active += node.size
+
+    walk(params, False)
+    return total, active

@@ -1,0 +1,335 @@
+"""Static analysis of optimized HLO text → roofline inputs.
+
+XLA's `compiled.cost_analysis()` counts ops inside `while` bodies (lax.scan —
+i.e. *every layer of every model here*) exactly once, so its flops/bytes are
+useless for scanned models. This module parses the post-SPMD HLO text and
+computes, with loop-trip-count multipliers propagated through the call graph
+(entry → while bodies → nested scans; fusion bodies fold into their call
+sites):
+
+  * dot_flops        — 2 · |result| · |contraction| per dot, × multiplier
+  * traffic_bytes    — Σ (operand + result bytes) over *materializing* ops
+                       (fusions, dots, copies, DUS, converts, collectives…)
+                       — a fused-op-level HBM traffic model
+  * collective bytes — per collective kind, × multiplier
+
+Trip counts come from the integer constant in each while's condition
+computation (lax.scan lowers to `compare(i, c), direction=LT`); dynamic
+conditions fall back to ×1 and are reported in `unknown_trip_whiles`.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\s*\{")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ops that don't move HBM bytes themselves
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id", "replica-id",
+    "iota", "custom-call",  # custom-call operands counted if it materializes
+}
+
+
+def _dims(shape_str: str):
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return None, 0
+    dt, dims = m.groups()
+    sizes = [int(d) for d in dims.split(",") if d]
+    n = 1
+    for s in sizes:
+        n *= s
+    return sizes, n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _shape_bytes_multi(type_str: str) -> int:
+    return sum(_dims(s.group(0))[1] for s in _SHAPE_RE.finditer(type_str))
+
+
+@dataclass
+class Op:
+    name: str
+    result_type: str
+    kind: str
+    rest: str  # operands + attrs (raw tail of the line)
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+    n_whiles: int = 0
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[Op]] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line.strip())
+        if mc and ("=" not in line.split("(")[0]):
+            cur = mc.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            name, rtype, kind, rest = mo.groups()
+            comps[cur].append(Op(name, rtype, kind, rest))
+    return comps, entry
+
+
+def _split_operands(rest: str) -> tuple[list[str], str]:
+    """Split 'a, %b, ...), attrs' into operand names and the attr tail."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner, attrs = rest[:i], rest[i + 1:]
+                ops = [o.strip() for o in _top_split(inner)]
+                names = [
+                    o.split()[-1].lstrip("%") for o in ops if o and "%" in o
+                ]
+                return names, attrs
+    return [], rest
+
+
+def _top_split(s: str):
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _fusion_traffic(op, names, attrs, comps, shapes, res_b) -> float:
+    """Fusion-op traffic with slice-through-parameter inspection."""
+    mcall = re.search(r"calls=%?([\w.\-]+)", attrs)
+    body = comps.get(mcall.group(1), []) if mcall else []
+    param_idx: dict[str, int] = {}
+    defs: dict[str, "Op"] = {}
+    for bop in body:
+        defs[bop.name] = bop
+        if bop.kind == "parameter":
+            mi = re.match(r"(\d+)", bop.rest)
+            if mi:
+                param_idx[bop.name] = int(mi.group(1))
+    # params that are only read through a slice/gather/ds charge slice bytes
+    sliced_bytes: dict[int, float] = {}
+    full_use: set[int] = set()
+    root_dus_upd: float | None = None
+    for bop in body:
+        if bop.kind == "parameter":
+            continue
+        onames, _ = _split_operands(bop.rest)
+        for pos, nm in enumerate(onames):
+            tgt = nm
+            # resolve through layout/dtype-only chains to the fusion param
+            for _hop in range(6):
+                if tgt in param_idx or tgt not in defs:
+                    break
+                if defs[tgt].kind in ("bitcast", "copy", "reshape",
+                                      "transpose", "convert"):
+                    inner, _ = _split_operands(defs[tgt].rest)
+                    if not inner:
+                        break
+                    tgt = inner[0]
+                else:
+                    break
+            if tgt not in param_idx:
+                continue
+            pi = param_idx[tgt]
+            if bop.kind in ("dynamic-slice", "slice", "gather") and pos == 0:
+                sliced_bytes[pi] = sliced_bytes.get(pi, 0.0) + _shape_bytes_multi(
+                    bop.result_type
+                )
+            elif bop.kind == "dynamic-update-slice" and pos == 0:
+                upd_names, _ = _split_operands(bop.rest)
+                upd_b = (
+                    _shape_bytes_multi(shapes.get(upd_names[1], ""))
+                    or _shape_bytes_multi(
+                        defs[upd_names[1]].result_type
+                    ) if len(upd_names) > 1 and upd_names[1] in defs else 0
+                )
+                sliced_bytes[pi] = sliced_bytes.get(pi, 0.0) + 2 * upd_b
+                root_dus_upd = (root_dus_upd or 0.0) + upd_b
+            else:
+                full_use.add(pi)
+    total = 0.0
+    for pos, nm in enumerate(names):
+        ob = _shape_bytes_multi(shapes.get(nm, ""))
+        if pos in sliced_bytes and pos not in full_use:
+            total += min(ob, sliced_bytes[pos])
+        else:
+            total += ob
+    # DUS-rooted fusion writes the update region, not the whole buffer
+    if root_dus_upd is not None and res_b >= root_dus_upd:
+        total += root_dus_upd
+    else:
+        total += res_b
+    return total
+
+
+def parse_hlo_stats(text: str) -> HloStats:
+    comps, entry = _parse_computations(text)
+    shapes: dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            shapes[op.name] = op.result_type
+
+    # ---- call-graph multipliers -------------------------------------------
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        return HloStats()
+    stats = HloStats()
+
+    def trip_count(cond_comp: str) -> float:
+        best = None
+        for op in comps.get(cond_comp, []):
+            if op.kind == "constant":
+                m = re.search(r"constant\((-?\d+)", "constant(" + op.rest)
+                if m:
+                    v = int(m.group(1))
+                    if v > 0:
+                        best = max(best or 0, v)
+        if best is None:
+            stats.unknown_trip_whiles += 1
+            return 1.0
+        return float(best)
+
+    # BFS from entry
+    pending = [(entry, 1.0)]
+    seen_pairs = []
+    fusion_parent_mult: dict[str, float] = defaultdict(float)
+    while pending:
+        comp, m = pending.pop()
+        mult[comp] += m
+        for op in comps.get(comp, []):
+            attrs = op.rest
+            if op.kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", attrs)
+                stats.n_whiles += 1
+                if mb:
+                    tc = trip_count(mc.group(1)) if mc else 1.0
+                    pending.append((mb.group(1), m * tc))
+            elif op.kind in ("fusion", "call", "custom-call", "reduce",
+                             "map", "scatter", "select-and-scatter", "sort"):
+                for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", attrs):
+                    fusion_parent_mult[mm.group(1)] += m
+            elif op.kind == "conditional":
+                for mm in re.finditer(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"(?:true|false)_computation=%?([\w.\-]+))", attrs,
+                ):
+                    blob = mm.group(1) or mm.group(2) or ""
+                    for b in re.findall(r"%?([\w.\-]+)", blob):
+                        pending.append((b, m))
+
+    # dots inside fusion/reduce bodies count at the call-site multiplier
+    for comp, m in fusion_parent_mult.items():
+        if comp in comps:
+            mult[comp] += m
+
+    # ---- accumulate ---------------------------------------------------------
+    for comp, ops in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion_body = comp in fusion_parent_mult
+        for op in ops:
+            if op.kind == "dot":
+                res_dims, _ = _dims(op.result_type)
+                names, attrs = _split_operands(op.rest)
+                lhs_shape = shapes.get(names[0], "") if names else ""
+                lhs_dims, _ = _dims(lhs_shape)
+                mctr = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+                ctr = 1
+                if lhs_dims and mctr:
+                    for d in mctr.group(1).split(","):
+                        if d:
+                            ctr *= lhs_dims[int(d)]
+                nres = 1
+                for d in res_dims or []:
+                    nres *= d
+                stats.dot_flops += m * 2.0 * nres * ctr
+            kind = next(
+                (k for k in _COLLECTIVES
+                 if op.kind == k or op.kind.startswith(k + "-start")
+                 or op.kind == k + "-start"),
+                None,
+            )
+            if kind:
+                b = _shape_bytes_multi(op.result_type)
+                ent = stats.collectives.setdefault(kind, {"bytes": 0.0, "count": 0})
+                ent["bytes"] += m * b
+                ent["count"] += m
+            # traffic model: top-level materializing ops only.
+            # Sliced access patterns charge the bytes actually touched, not
+            # the whole operand (a dynamic-slice of a 500k-token cache reads
+            # one slice, not the buffer). Fusions are inspected: operands
+            # that are only sliced/gathered inside the fused body charge the
+            # slice bytes; a DUS root charges the update, not the buffer.
+            if not in_fusion_body and op.kind not in _FREE_OPS:
+                names, attrs = _split_operands(op.rest)
+                res_b = _shape_bytes_multi(op.result_type)
+                if op.kind in ("dynamic-slice", "slice", "gather"):
+                    b = 2 * res_b                      # read slice + write out
+                elif op.kind == "dynamic-update-slice":
+                    upd = (_shape_bytes_multi(shapes.get(names[1], ""))
+                           if len(names) > 1 else res_b)
+                    b = 3 * upd                        # read old+new, write
+                elif op.kind == "scatter":
+                    upd = (_shape_bytes_multi(shapes.get(names[2], ""))
+                           if len(names) > 2 else res_b)
+                    b = 3 * upd
+                elif op.kind == "fusion":
+                    b = _fusion_traffic(op, names, attrs, comps, shapes, res_b)
+                else:
+                    b = res_b
+                    for nm in names:
+                        b += _shape_bytes_multi(shapes.get(nm, ""))
+                stats.traffic_bytes += m * b
+    return stats

@@ -1,0 +1,6 @@
+"""repro.serve — slot-based continuous-batching serving engine."""
+from .engine import Engine, Request
+from .sampling import sample
+from .scheduler import ContinuousBatchingScheduler, ServeStats
+
+__all__ = ["Engine", "Request", "sample", "ContinuousBatchingScheduler", "ServeStats"]

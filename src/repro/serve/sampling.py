@@ -1,0 +1,22 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jax.Array,
+    rng: jax.Array,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jax.Array:
+    """logits: (B, V) → (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

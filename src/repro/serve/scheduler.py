@@ -1,0 +1,84 @@
+"""Continuous-batching scheduler: FCFS admission, one prefill per tick, then
+a batched decode step (paper §5.3.2's mixed prefill/decode workload).
+
+Pure-python control around the jit'd engine steps; per-request latency and
+throughput accounting built in (used by benchmarks/decode_bench.py to
+reproduce the paper's continuous-batching table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Iterable
+
+from .engine import Engine, Request
+
+
+@dataclasses.dataclass
+class ServeStats:
+    wall_s: float = 0.0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    completed: int = 0
+    ttft_s: list = dataclasses.field(default_factory=list)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def throughput_tok_s(self) -> float:
+        return self.total_tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.decode_tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def prefill_tok_s(self) -> float:
+        return self.prefill_tokens / self.wall_s if self.wall_s else 0.0
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.queue: deque[Request] = deque()
+        self.completed: list[Request] = []
+
+    def submit(self, reqs: Iterable[Request]):
+        for r in reqs:
+            r.t_submit = time.perf_counter()
+            self.queue.append(r)
+
+    def tick(self):
+        """One scheduler iteration: ≤1 prefill admission + 1 decode step."""
+        if self.queue and self.engine.add(self.queue[0]):
+            self.queue.popleft()
+        before = set(self.engine.slot_req)
+        self.engine.decode_once()
+        after = set(self.engine.slot_req)
+        for slot in before - after:
+            pass  # finished requests already detached by the engine
+
+    def run_to_completion(self, max_ticks: int = 100_000) -> ServeStats:
+        t0 = time.perf_counter()
+        n_submitted = len(self.queue)
+        finished: list[Request] = []
+        pending = lambda: self.queue or self.engine.n_active
+        ticks = 0
+        all_reqs: list[Request] = list(self.queue)
+        while pending() and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        wall = time.perf_counter() - t0
+        stats = ServeStats(
+            wall_s=wall,
+            prefill_tokens=self.engine.prefill_tokens,
+            decode_tokens=self.engine.decode_tokens,
+            completed=sum(r.done for r in all_reqs),
+            ttft_s=[
+                r.t_first_token - r.t_submit for r in all_reqs if r.t_first_token
+            ],
+        )
+        return stats

@@ -1,0 +1,4 @@
+"""repro.train — fault-tolerant training loop."""
+from .trainer import TrainConfig, Trainer, make_loss_fn, make_train_step
+
+__all__ = ["TrainConfig", "Trainer", "make_loss_fn", "make_train_step"]

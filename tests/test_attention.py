@@ -1,0 +1,124 @@
+"""Attention: chunked == dense, windows, ring caches, MLA absorbed decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import LayerSpec
+from repro.models.attention import attn_apply, attn_cache_init, sdpa
+
+
+def _qkv(rng, b, s, h, kv, d):
+    q = rng.standard_normal((b, s, h, d)).astype(np.float32)
+    k = rng.standard_normal((b, s, kv, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, kv, d)).astype(np.float32)
+    pos = np.broadcast_to(np.arange(s, dtype=np.int32), (b, s))
+    return map(jnp.asarray, (q, k, v, pos))
+
+
+class TestSdpa:
+    @pytest.mark.parametrize("window", [0, 7])
+    def test_chunked_equals_dense(self, window, rng):
+        b, s, h, kv, d = 2, 64, 4, 2, 8
+        q, k, v, pos = _qkv(rng, b, s, h, kv, d)
+        dense = sdpa(q, k, v, pos, pos, causal=True, window=window, dense_max=9999)
+        chunked = sdpa(q, k, v, pos, pos, causal=True, window=window,
+                       chunk=16, dense_max=1)
+        np.testing.assert_allclose(
+            np.asarray(dense), np.asarray(chunked), rtol=2e-3, atol=2e-3
+        )
+
+    def test_causality(self, rng):
+        b, s, h, kv, d = 1, 12, 2, 2, 4
+        q, k, v, pos = _qkv(rng, b, s, h, kv, d)
+        out1 = sdpa(q, k, v, pos, pos, causal=True)
+        k2 = k.at[:, 8:].set(99.0)
+        v2 = v.at[:, 8:].set(-99.0)
+        out2 = sdpa(q, k2, v2, pos, pos, causal=True)
+        np.testing.assert_array_equal(
+            np.asarray(out1)[:, :8], np.asarray(out2)[:, :8]
+        )
+
+    def test_window_masks_far_tokens(self, rng):
+        b, s, h, kv, d = 1, 16, 2, 2, 4
+        q, k, v, pos = _qkv(rng, b, s, h, kv, d)
+        w = 4
+        out1 = sdpa(q, k, v, pos, pos, causal=True, window=w)
+        # changing keys older than the window must not affect the last query
+        k2 = k.at[:, : s - w].set(7.0)
+        v2 = v.at[:, : s - w].set(-7.0)
+        out2 = sdpa(q, k2, v2, pos, pos, causal=True, window=w)
+        np.testing.assert_array_equal(
+            np.asarray(out1)[:, -1], np.asarray(out2)[:, -1]
+        )
+
+    def test_invalid_slots_ignored(self, rng):
+        b, s, h, kv, d = 1, 8, 2, 2, 4
+        q, k, v, pos = _qkv(rng, b, s, h, kv, d)
+        kv_pos = jnp.asarray(np.where(np.arange(s) < 6, np.arange(s), -1))[None, :]
+        out1 = sdpa(q, k, v, pos, jnp.broadcast_to(kv_pos, (b, s)))
+        k2 = k.at[:, 6:].set(50.0)
+        out2 = sdpa(q, k2, v, pos, jnp.broadcast_to(kv_pos, (b, s)))
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+class TestRingCache:
+    def test_ring_equals_full_for_windowed_layer(self):
+        """A windowed layer served from a ring buffer of `window` slots must
+        produce the same decode outputs as a full-length cache."""
+        cfg = get_config("gemma3-1b", smoke=True)
+        spec = LayerSpec(window=16, rope_theta=10_000.0)
+        rng = jax.random.PRNGKey(0)
+        from repro.models.attention import attn_init
+
+        p = attn_init(rng, cfg, spec)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, cfg.d_model))
+
+        outs = {}
+        for max_len in (16, 64):  # ring (window) vs oversized buffer
+            cache = attn_cache_init(cfg, spec, 2, max_len, jnp.float32)
+            if max_len == 64:  # force full buffer (no ring wrap)
+                cache = {
+                    "k": jnp.zeros((2, 64, cfg.n_kv_heads, cfg.head_dim)),
+                    "v": jnp.zeros((2, 64, cfg.n_kv_heads, cfg.head_dim)),
+                    "slot_pos": jnp.full((2, 64), -1, jnp.int32),
+                    "idx": jnp.zeros((2,), jnp.int32),
+                }
+            y, cache = attn_apply(
+                p, x[:, :32], cfg=cfg, spec=spec, mode="eval", cache=cache
+            )
+            steps = []
+            for t in range(32, 40):
+                y, cache = attn_apply(
+                    p, x[:, t : t + 1], cfg=cfg, spec=spec, mode="eval", cache=cache
+                )
+                steps.append(np.asarray(y))
+            outs[max_len] = np.concatenate(steps, axis=1)
+        np.testing.assert_allclose(outs[16], outs[64], rtol=2e-4, atol=2e-4)
+
+
+class TestMLA:
+    def test_absorbed_decode_close_to_naive(self):
+        cfg = get_config("deepseek-v3-671b", smoke=True)
+        from repro.models import decode_step, init_cache, init_lm, lm_hidden, prefill
+        from repro.models.decoder import _head_matmul
+
+        tok = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        h, _, _ = lm_hidden(params, tok, cfg, mode="eval")
+        want = np.asarray(_head_matmul(params, h[:, -1:, :], cfg)[:, 0])
+        cache = init_cache(cfg, 2, max_len=24)
+        _, cache = prefill(params, tok[:, :16], cache, cfg, mode="eval")
+        got, _ = decode_step(params, tok[:, 16:17], cache, cfg, mode="eval")
+        rel = np.abs(np.asarray(got) - want).max() / (np.abs(want).max() + 1e-9)
+        assert rel < 5e-2, rel  # int8-act-quant asymmetry only
+
+    def test_latent_cache_is_compact(self):
+        cfg = get_config("deepseek-v3-671b", smoke=True)
+        from repro.models.mla import mla_cache_init
+
+        c = mla_cache_init(cfg, None, batch=2, max_len=10, dtype=jnp.bfloat16)
+        per_tok = c["ckv"].shape[-1] + c["krope"].shape[-1]
+        naive = cfg.n_heads * cfg.mla.v_dim * 2  # k+v per token
+        assert per_tok < naive / 2  # the MLA cache-compression win

@@ -1,0 +1,76 @@
+"""Flash-attention Pallas kernel: interpret-mode allclose vs the sdpa oracle
+over shape/dtype/mask sweeps (deliverable c: per-kernel shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention_bsnd
+from repro.models.attention import sdpa
+
+
+def _case(rng, b, s, h, kv, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 32, 2, 2, 8), (2, 64, 4, 2, 16), (1, 100, 4, 1, 32), (2, 17, 3, 1, 8),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_matches_sdpa(b, s, h, kv, d, causal, rng):
+    q, k, v, pos = _case(rng, b, s, h, kv, d, jnp.float32)
+    want = np.asarray(sdpa(q, k, v, pos, pos, causal=causal, dense_max=10**6))
+    got = np.asarray(flash_attention_bsnd(
+        q, k, v, causal=causal, bq=32, bk=32, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24])
+def test_sliding_window(window, rng):
+    q, k, v, pos = _case(rng, 1, 96, 4, 2, 16, jnp.float32)
+    want = np.asarray(sdpa(q, k, v, pos, pos, causal=True, window=window,
+                           dense_max=10**6))
+    got = np.asarray(flash_attention_bsnd(
+        q, k, v, causal=True, window=window, bq=16, bk=16, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_bf16(rng):
+    q, k, v, pos = _case(rng, 2, 64, 4, 4, 16, jnp.bfloat16)
+    want = np.asarray(sdpa(q, k, v, pos, pos, causal=True, dense_max=10**6),
+                      np.float32)
+    got = np.asarray(flash_attention_bsnd(
+        q, k, v, causal=True, bq=32, bk=32, interpret=True), np.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_softcap(rng):
+    q, k, v, pos = _case(rng, 1, 48, 2, 2, 16, jnp.float32)
+    want = np.asarray(sdpa(q, k, v, pos, pos, causal=True, softcap=20.0,
+                           dense_max=10**6))
+    got = np.asarray(flash_attention_bsnd(
+        q, k, v, causal=True, softcap=20.0, bq=16, bk=16, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_model_integration_flash_flag(rng):
+    """cfg.attn_impl='flash' end-to-end equals the chunked/dense path."""
+    from repro.configs import get_config
+    from repro.models import init_lm, lm_hidden
+
+    cfg = get_config("smollm-360m", smoke=True)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0, cfg.vocab)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    h_ref, _, _ = lm_hidden(params, tok, cfg, mode="eval")
+    cfg2 = cfg.with_(attn_impl="flash")
+    h_fl, _, _ = lm_hidden(params, tok, cfg2, mode="eval")
+    # bf16 + QAT act-quant rounding flips cascade through layers; compare
+    # with an absolute tolerance sized to the hidden-state scale.
+    a, b = np.asarray(h_fl, np.float32), np.asarray(h_ref, np.float32)
+    scale = np.abs(b).mean()
+    assert np.abs(a - b).max() < 0.15 * scale + 0.1
+    assert np.corrcoef(a.ravel(), b.ravel())[0, 1] > 0.999

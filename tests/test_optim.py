@@ -1,0 +1,119 @@
+"""Optimizer: AdamW reference equivalence, int8-state error bounds, schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig,
+    QTensor,
+    adamw_init,
+    adamw_update,
+    dequantize_blockwise,
+    global_norm,
+    lr_at,
+    quantize_blockwise,
+)
+
+
+def _ref_adamw(params, grads, m, v, step, cfg):
+    """Plain fp32 AdamW (no clip for clarity — grads pre-scaled)."""
+    out_p, out_m, out_v = {}, {}, {}
+    b1c = 1 - cfg.b1**step
+    b2c = 1 - cfg.b2**step
+    for k in params:
+        g = grads[k]
+        out_m[k] = cfg.b1 * m[k] + (1 - cfg.b1) * g
+        out_v[k] = cfg.b2 * v[k] + (1 - cfg.b2) * g * g
+        mh, vh = out_m[k] / b1c, out_v[k] / b2c
+        delta = mh / (np.sqrt(vh) + cfg.eps)
+        if params[k].ndim >= 2:
+            delta = delta + cfg.weight_decay * params[k]
+        out_p[k] = params[k] - lr_at_np(cfg, step) * delta
+    return out_p, out_m, out_v
+
+
+def lr_at_np(cfg, step):
+    return float(lr_at(cfg, jnp.asarray(step)))
+
+
+class TestAdamW:
+    def test_matches_reference_fp32(self, rng):
+        cfg = AdamWConfig(lr=1e-2, int8_state=False, grad_clip=1e9,
+                          warmup_steps=1, total_steps=10**9)
+        params = {"a": rng.standard_normal((8, 16)).astype(np.float32),
+                  "b": rng.standard_normal((32,)).astype(np.float32)}
+        grads = {k: rng.standard_normal(v.shape).astype(np.float32) * 0.1
+                 for k, v in params.items()}
+        jp = jax.tree.map(jnp.asarray, params)
+        jg = jax.tree.map(jnp.asarray, grads)
+        opt = adamw_init(jp, cfg)
+        new_p, new_opt, metrics = adamw_update(jp, jg, opt, cfg)
+        ref_p, _, _ = _ref_adamw(
+            params, grads,
+            {k: np.zeros_like(v) for k, v in params.items()},
+            {k: np.zeros_like(v) for k, v in params.items()}, 1, cfg)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(new_p[k]), ref_p[k],
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_grad_clip(self, rng):
+        cfg = AdamWConfig(grad_clip=1.0, int8_state=False)
+        params = {"a": jnp.zeros((4, 4))}
+        grads = {"a": jnp.full((4, 4), 100.0)}
+        _, _, metrics = adamw_update(params, grads, adamw_init(params, cfg), cfg)
+        assert float(metrics["grad_norm"]) == pytest.approx(400.0)
+
+    def test_int8_state_update_error_small(self, rng):
+        """One step with int8 m / bf16 v must track fp32 closely."""
+        big = rng.standard_normal((64, 128)).astype(np.float32)
+        g = rng.standard_normal((64, 128)).astype(np.float32) * 0.01
+        p = {"w": jnp.asarray(big)}
+        gt = {"w": jnp.asarray(g)}
+        outs = {}
+        for int8 in (False, True):
+            cfg = AdamWConfig(lr=1e-2, int8_state=int8, grad_clip=1e9)
+            st = adamw_init(p, cfg)
+            newp = p
+            for _ in range(5):
+                newp, st, _ = adamw_update(newp, gt, st, cfg)
+            outs[int8] = np.asarray(newp["w"])
+        err = np.abs(outs[True] - outs[False]).max()
+        scale = np.abs(outs[False] - big).max()  # total movement
+        # int8-m / bf16-v must track fp32 within half the step magnitude and
+        # agree on update direction (convergence itself is asserted end-to-end
+        # in test_trainer.py::test_grad_compression_trains)
+        assert err < 0.5 * scale + 1e-6
+        d_true = outs[False] - big
+        d_q = outs[True] - big
+        agree = np.sign(d_true[np.abs(d_true) > 1e-5]) == np.sign(
+            d_q[np.abs(d_true) > 1e-5]
+        )
+        assert agree.mean() > 0.95
+
+    def test_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+        assert lr_at_np(cfg, 0) == 0.0
+        assert lr_at_np(cfg, 10) == pytest.approx(1.0)
+        assert lr_at_np(cfg, 100) == pytest.approx(0.1, rel=1e-3)
+        assert lr_at_np(cfg, 55) < lr_at_np(cfg, 11)
+
+
+class TestQTensor:
+    def test_roundtrip_error_bound(self, rng):
+        x = rng.standard_normal((16, 2048)).astype(np.float32)
+        q = quantize_blockwise(jnp.asarray(x))
+        back = np.asarray(dequantize_blockwise(q))
+        rowmax = np.abs(x).max(axis=-1, keepdims=True)
+        assert np.all(np.abs(back - x) <= rowmax / 127 + 1e-7)
+
+    def test_is_pytree_with_static_shape(self):
+        q = quantize_blockwise(jnp.ones((4, 8)))
+        leaves = jax.tree.leaves(q)
+        assert len(leaves) == 2  # q, scale — shape tuple must NOT leak
+        out = jax.jit(lambda t: dequantize_blockwise(t))(q)
+        assert out.shape == (4, 8)
+
+    def test_global_norm(self):
+        t = {"a": jnp.ones((3,)) * 2.0, "b": jnp.ones((4,)) * 1.0}
+        assert float(global_norm(t)) == pytest.approx(np.sqrt(12 + 4))

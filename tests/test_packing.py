@@ -1,0 +1,101 @@
+"""Packing unit + property tests (paper §3.3: lossless flexible sub-2-bit)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    pack_group_sizes,
+    pack_ternary,
+    pack_weight,
+    sign_matrix,
+    ternary_quantize,
+    unpack_ternary,
+)
+
+GOOD_K = st.integers(4, 400).filter(lambda k: k not in (6, 7, 11))
+
+
+class TestSignMatrix:
+    def test_shape_and_range(self):
+        for g in (4, 5):
+            s = sign_matrix(g)
+            assert s.shape == (3**g, g)
+            assert set(np.unique(s)) <= {-1, 0, 1}
+
+    def test_row_encodes_index(self):
+        """Row i must be the ternary expansion of i (paper Fig. 6)."""
+        for g in (4, 5):
+            s = sign_matrix(g).astype(np.int64)
+            idx = ((s + 1) * (3 ** np.arange(g))).sum(axis=1)
+            assert np.array_equal(idx, np.arange(3**g))
+
+    def test_all_rows_distinct(self):
+        s = sign_matrix(5)
+        assert len({tuple(r) for r in s}) == 3**5
+
+    def test_zero_row_is_center(self):
+        for g in (4, 5):
+            zc = (3**g - 1) // 2
+            assert np.all(sign_matrix(g)[zc] == 0)
+
+
+class TestPackRoundtrip:
+    @given(
+        st.integers(1, 7),
+        st.sampled_from([4, 5]),
+        st.integers(1, 30),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_property(self, m, g, kg, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.integers(-1, 2, size=(m, kg * g)).astype(np.int8)
+        packed = pack_ternary(jnp.asarray(w), g)
+        assert packed.dtype == jnp.uint8
+        assert int(jnp.max(packed)) < 3**g
+        back = unpack_ternary(packed, g)
+        assert np.array_equal(np.asarray(back), w)
+
+    def test_nondivisible_raises(self):
+        with pytest.raises(ValueError):
+            pack_ternary(jnp.zeros((2, 7), jnp.int8), 4)
+
+
+class TestFlexiblePacking:
+    @given(GOOD_K)
+    @settings(max_examples=60, deadline=None)
+    def test_group_sizes_cover_k(self, k):
+        n5, n4 = pack_group_sizes(k)
+        assert 5 * n5 + 4 * n4 == k
+
+    @given(GOOD_K)
+    @settings(max_examples=30, deadline=None)
+    def test_bpw_near_1_6(self, k):
+        """Paper: flexible packing always near-1.6 bpw; never above 2.0."""
+        n5, n4 = pack_group_sizes(k)
+        bpw = 8.0 * (n5 + n4) / k
+        assert 1.6 <= bpw <= 2.0
+
+    def test_impossible_k(self):
+        for k in (1, 2, 3, 6, 7, 11):
+            with pytest.raises(ValueError):
+                pack_group_sizes(k)
+
+    @given(st.integers(1, 6), GOOD_K, st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_packed_weight_roundtrip(self, m, k, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((m, k)).astype(np.float32)
+        tw = ternary_quantize(jnp.asarray(w))
+        pw = pack_weight(tw.values, tw.scale, mode="auto")
+        assert np.array_equal(np.asarray(pw.unpack()), np.asarray(tw.values))
+        assert pw.bits_per_weight <= 2.0
+
+    def test_modes(self):
+        w = jnp.asarray(np.random.default_rng(0).integers(-1, 2, (4, 40)), jnp.int8)
+        s = jnp.ones((4,))
+        assert pack_weight(w, s, "i1").bits_per_weight == pytest.approx(1.6)
+        assert pack_weight(w, s, "i2").bits_per_weight == pytest.approx(2.0)
+        with pytest.raises(ValueError):
+            pack_weight(jnp.zeros((2, 21), jnp.int8), jnp.ones(2), "i1")

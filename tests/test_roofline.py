@@ -1,0 +1,71 @@
+"""Roofline analysis: HLO collective parser + three-term model."""
+import pytest
+
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    _shape_bytes,
+    collective_bytes,
+)
+
+HLO = """
+HloModule jit_step
+ENTRY %main {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %ar = f32[8,128]{1,0} all-reduce(%p0), replica_groups={{0,1}}
+  %ag.1 = bf16[16,256]{1,0} all-gather(%p0), dimensions={0}
+  %rs = f32[4,128]{1,0} reduce-scatter(%ar), dimensions={0}
+  %a2a = (s8[2,64]{1,0}, s8[2,64]{1,0}) all-to-all(%p0, %p0)
+  %cp = u8[32]{0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %add = f32[8,128]{1,0} add(%p0, %ar)
+}
+"""
+
+
+class TestParser:
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+        assert _shape_bytes("bf16[16,256]") == 16 * 256 * 2
+        assert _shape_bytes("u8[32]") == 32
+        assert _shape_bytes("f32[]") == 4
+
+    def test_collective_bytes(self):
+        got = collective_bytes(HLO)
+        assert got["all-reduce"]["bytes"] == 8 * 128 * 4
+        assert got["all-gather"]["bytes"] == 16 * 256 * 2
+        assert got["reduce-scatter"]["bytes"] == 4 * 128 * 4
+        assert got["all-to-all"]["bytes"] == 2 * (2 * 64)
+        assert got["collective-permute"]["bytes"] == 32
+        assert got["all-reduce"]["count"] == 1
+
+    def test_non_collectives_ignored(self):
+        got = collective_bytes("%x = f32[8,8]{1,0} add(%a, %b)")
+        assert sum(v["bytes"] for v in got.values()) == 0
+
+
+class TestModel:
+    def test_terms_and_dominant(self):
+        rl = Roofline(
+            arch="a", shape="s", mesh="m", chips=256,
+            flops_per_device=197e12 * 0.5,       # 0.5 s compute
+            bytes_per_device=819e9 * 0.1,        # 0.1 s memory
+            coll_bytes_per_device=50e9 * 0.2,    # 0.2 s collective
+            model_flops_total=197e12 * 256 * 0.25,
+        )
+        assert rl.compute_s == pytest.approx(0.5)
+        assert rl.memory_s == pytest.approx(0.1)
+        assert rl.collective_s == pytest.approx(0.2)
+        assert rl.dominant == "compute"
+        assert rl.roofline_fraction == pytest.approx(0.5)
+        assert rl.useful_flops_ratio == pytest.approx(0.5)
+
+    def test_memory_efficiency(self):
+        rl = Roofline(
+            arch="a", shape="s", mesh="m", chips=1,
+            flops_per_device=0, bytes_per_device=100.0,
+            coll_bytes_per_device=0, min_bytes_per_device=40.0,
+        )
+        assert rl.memory_efficiency == pytest.approx(0.4)
+        assert rl.dominant == "memory"

@@ -1,0 +1,64 @@
+"""End-to-end system behaviour: train → convert → serve (the paper's full
+lifecycle: QAT ternary training, offline packing, Vec-LUT-served continuous
+batching)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.models import pack_params, packed_param_bytes
+from repro.optim import AdamWConfig
+from repro.serve import ContinuousBatchingScheduler, Engine, Request
+from repro.train import TrainConfig, Trainer
+
+
+@pytest.mark.slow
+def test_train_pack_serve_lifecycle(tmp_path):
+    cfg = get_config("smollm-360m", smoke=True).with_(loss_chunk=64)
+    tc = TrainConfig(total_steps=30, checkpoint_every=15, log_every=10,
+                     checkpoint_dir=str(tmp_path))
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=30)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
+    trainer = Trainer(cfg, opt, tc, dc)
+    log = trainer.run()
+    assert log[-1]["loss"] < log[0]["loss"] + 0.05  # moving the right way
+
+    # offline weight transformation (paper §3.1 stage i)
+    dense_params = trainer.state["params"]
+    packed = pack_params(dense_params, cfg)
+    dense_bytes = packed_param_bytes(dense_params)
+    packed_bytes = packed_param_bytes(packed)
+    # ≤2-bit weights: big shrink vs bf16 even counting embeddings/scales
+    assert packed_bytes < 0.55 * dense_bytes
+
+    # serve with continuous batching
+    eng = Engine(packed, cfg, max_slots=4, max_len=96)
+    sched = ContinuousBatchingScheduler(eng)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=12).astype(np.int32),
+                max_new_tokens=6)
+        for i in range(6)
+    ]
+    sched.submit(reqs)
+    stats = sched.run_to_completion()
+    assert stats.completed == 6
+    for r in reqs:
+        assert len(r.generated) == 6
+        assert all(0 <= t < cfg.vocab for t in r.generated)
+
+
+def test_bpw_accounting():
+    """Paper Table 3 analogue: I1=1.60, I2=2.00, mixed ≤ 2.0 bpw for the
+    linears of every arch."""
+    from repro.core import pack_weight, ternary_quantize
+
+    for k, mode, want in [(960, "i1", 1.60), (960, "i2", 2.0), (133, "auto", None)]:
+        w = jax.random.normal(jax.random.PRNGKey(0), (8, k))
+        tw = ternary_quantize(w)
+        pw = pack_weight(tw.values, tw.scale, mode)
+        if want:
+            assert pw.bits_per_weight == pytest.approx(want, abs=0.01)
+        else:
+            assert pw.bits_per_weight <= 2.0

@@ -1,0 +1,110 @@
+"""Trainer integration: learning, resume, preemption, stragglers, restarts."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.dist.fault_tolerance import StragglerMonitor, run_with_restarts
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+
+def _mk_trainer(tmp_path, steps=40, **kw):
+    cfg = get_config("smollm-360m", smoke=True).with_(loss_chunk=64)
+    tc = TrainConfig(
+        total_steps=steps, checkpoint_every=20, log_every=10,
+        checkpoint_dir=str(tmp_path), **kw,
+    )
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=steps)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
+    return Trainer(cfg, opt, tc, dc)
+
+
+@pytest.mark.slow
+class TestTraining:
+    def test_loss_decreases(self, tmp_path):
+        tr = _mk_trainer(tmp_path / "a", steps=40)
+        log = tr.run()
+        assert log[-1]["loss"] < log[0]["loss"]
+        assert all(np.isfinite(r["loss"]) for r in log)
+
+    def test_resume_from_checkpoint(self, tmp_path):
+        tr = _mk_trainer(tmp_path / "b", steps=20)
+        tr.run()
+        # second trainer picks up at step 20 and continues to 40
+        cfg = get_config("smollm-360m", smoke=True).with_(loss_chunk=64)
+        tc = TrainConfig(total_steps=40, checkpoint_every=20, log_every=10,
+                         checkpoint_dir=str(tmp_path / "b"))
+        tr2 = Trainer(cfg, AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=40),
+                      tc, DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4))
+        assert tr2.step == 20
+        tr2.run()
+        assert tr2.step == 40
+
+    def test_preemption_checkpoints_and_exits(self, tmp_path):
+        tr = _mk_trainer(tmp_path / "c", steps=1000)
+        orig_step = tr._step
+
+        def step_and_preempt(state, batch):
+            out = orig_step(state, batch)
+            if tr.step >= 4:
+                tr.guard.requested = True
+            return out
+
+        tr._step = step_and_preempt
+        tr.run()
+        assert tr.step < 1000
+        assert tr.ckpt.latest_step() == tr.step  # saved on the way out
+
+    def test_microbatch_accumulation(self, tmp_path):
+        tr = _mk_trainer(tmp_path / "d", steps=3, microbatches=2)
+        log = tr.run()
+        assert np.isfinite(log[-1]["loss"])
+
+    def test_grad_compression_trains(self, tmp_path):
+        tr = _mk_trainer(tmp_path / "e", steps=30, grad_compression=True)
+        log = tr.run()
+        assert log[-1]["loss"] < log[0]["loss"] + 0.05
+
+
+class TestFaultTolerance:
+    def test_straggler_monitor_flags_slow_host(self):
+        events = []
+        mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=2,
+                               on_straggler=events.append)
+        for step in range(10):
+            times = [0.1, 0.1, 0.1, 0.5]  # host 3 consistently 5× slower
+            mon.record(step, times)
+        assert events and all(e.host == 3 for e in events)
+
+    def test_straggler_monitor_ignores_uniform(self):
+        mon = StragglerMonitor(n_hosts=4)
+        for step in range(10):
+            mon.record(step, [0.1, 0.11, 0.09, 0.1])
+        assert not mon.events
+
+    def test_run_with_restarts_retries(self):
+        calls = []
+
+        def fn(attempt):
+            calls.append(attempt)
+            if attempt < 2:
+                raise RuntimeError("node lost")
+
+        used = run_with_restarts(fn, max_restarts=3, sleep=lambda s: None)
+        assert used == 2 and calls == [0, 1, 2]
+
+    def test_run_with_restarts_gives_up(self):
+        def fn(attempt):
+            raise RuntimeError("permanent")
+
+        with pytest.raises(RuntimeError):
+            run_with_restarts(fn, max_restarts=2, sleep=lambda s: None)
+
+    def test_non_retryable_propagates(self):
+        def fn(attempt):
+            raise ValueError("bug, not a fault")
+
+        with pytest.raises(ValueError):
+            run_with_restarts(fn, max_restarts=5, sleep=lambda s: None)

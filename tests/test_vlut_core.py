@@ -1,0 +1,170 @@
+"""Algorithm 1 correctness: every Vec-LUT variant must match the dense
+ternary-matmul oracle bit-exactly on the integer path (lossless claim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    lookup_accumulate,
+    max_block_int16,
+    mad_gemm,
+    mad_gemm_int8,
+    pack_ternary,
+    pack_weight,
+    precompute_lut,
+    precompute_lut_naive,
+    precompute_lut_topological,
+    scalar_lut_gemm,
+    sign_matrix,
+    ternary_quantize,
+    vlut_gemm,
+)
+
+
+def _oracle(tw_values, tw_scale, a):
+    amax = np.abs(a).max(axis=0)
+    a_scale = np.maximum(amax, 1e-6) / 127.0
+    a_q = np.clip(np.round(a / a_scale[None, :]), -127, 127).astype(np.int8)
+    out = np.asarray(tw_values, np.int32) @ a_q.astype(np.int32)
+    return out.astype(np.float32) * np.asarray(tw_scale)[:, None] * a_scale[None, :]
+
+
+def _mk(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((m, k)).astype(np.float32)
+    a = rng.standard_normal((k, n)).astype(np.float32)
+    tw = ternary_quantize(jnp.asarray(w))
+    return tw, a
+
+
+class TestPrecompute:
+    @pytest.mark.parametrize("g", [4, 5])
+    def test_matmul_vs_definition(self, g, rng):
+        k, n = 4 * g, 6
+        a_q = rng.integers(-127, 128, (k, n)).astype(np.int8)
+        t = np.asarray(precompute_lut(jnp.asarray(a_q), g))
+        s = sign_matrix(g).astype(np.int32)
+        want = np.einsum("eg,kgn->ken", s, a_q.reshape(k // g, g, n).astype(np.int32))
+        assert np.array_equal(t, want.astype(np.int16))
+
+    @pytest.mark.parametrize("g", [4, 5])
+    def test_topological_equals_matmul(self, g, rng):
+        """Paper §4: topological reuse computes the identical table."""
+        a_q = rng.integers(-127, 128, (3 * g, 5)).astype(np.int8)
+        t0 = np.asarray(precompute_lut(jnp.asarray(a_q), g))
+        t1 = np.asarray(precompute_lut_topological(jnp.asarray(a_q), g))
+        t2 = np.asarray(precompute_lut_naive(jnp.asarray(a_q), g))
+        assert np.array_equal(t0, t1)
+        assert np.array_equal(t0, t2)
+
+    def test_int16_no_overflow(self):
+        """Worst-case activations stay within int16 (|a| ≤ 127, g ≤ 5)."""
+        for g in (4, 5):
+            a_q = jnp.full((g, 2), 127, jnp.int8)
+            t = precompute_lut(a_q, g)
+            assert int(jnp.max(t)) == 127 * g  # no wraparound
+
+
+class TestLookupAccumulate:
+    @pytest.mark.parametrize("g", [4, 5])
+    @pytest.mark.parametrize("hier", [True, False])
+    def test_matches_dense(self, g, hier, rng):
+        m, kg, n = 16, 3 * max_block_int16(g) + 2, 9  # force multiple blocks
+        k = kg * g
+        w = rng.integers(-1, 2, (m, k)).astype(np.int8)
+        a_q = rng.integers(-127, 128, (k, n)).astype(np.int8)
+        packed = pack_ternary(jnp.asarray(w), g)
+        t = precompute_lut(jnp.asarray(a_q), g)
+        out = np.asarray(lookup_accumulate(t, packed, hierarchical=hier, g=g))
+        want = w.astype(np.int32) @ a_q.astype(np.int32)
+        assert np.array_equal(out, want)
+
+    def test_block_bound_is_safe(self):
+        """Paper §3.4 overflow bound: B ≤ max(INT16)/(max(INT8)·g)."""
+        for g in (4, 5):
+            assert max_block_int16(g) * 127 * g <= 32767
+
+
+class TestVlutGemm:
+    @given(
+        st.integers(1, 24),
+        st.integers(12, 120),
+        st.integers(1, 40),
+        st.sampled_from(["i1", "i2", "auto"]),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_oracle_property(self, m, k, n, mode, seed):
+        if mode == "i1":
+            k = (k // 5) * 5 or 5
+        elif mode == "i2":
+            k = (k // 4) * 4 or 4
+        elif k in (6, 7, 11):
+            k = 12
+        tw, a = _mk(m, k, n, seed)
+        pw = pack_weight(tw.values, tw.scale, mode=mode)
+        out = np.asarray(vlut_gemm(pw, jnp.asarray(a)))
+        want = _oracle(tw.values, tw.scale, a)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize(
+        "kwargs",
+        [
+            dict(streamed=False),
+            dict(hierarchical=False),
+            dict(precompute="topological"),
+            dict(precompute="naive"),
+            dict(token_contiguous=False),
+            dict(k_tile_groups=4),
+            dict(n_tile=8),
+        ],
+    )
+    def test_variants_equal(self, kwargs):
+        tw, a = _mk(32, 60, 16)
+        pw = pack_weight(tw.values, tw.scale, "auto")
+        base = np.asarray(vlut_gemm(pw, jnp.asarray(a)))
+        out = np.asarray(vlut_gemm(pw, jnp.asarray(a), **kwargs))
+        np.testing.assert_allclose(out, base, rtol=1e-6, atol=1e-6)
+
+
+class TestBaselines:
+    def test_scalar_lut_matches(self):
+        tw, a = _mk(20, 40, 7)
+        pw = pack_weight(tw.values, tw.scale, "auto")
+        np.testing.assert_allclose(
+            np.asarray(scalar_lut_gemm(pw, jnp.asarray(a))),
+            _oracle(tw.values, tw.scale, a), rtol=1e-5, atol=1e-5,
+        )
+
+    def test_mad_int8_matches(self):
+        tw, a = _mk(20, 40, 7)
+        pw = pack_weight(tw.values, tw.scale, "auto")
+        np.testing.assert_allclose(
+            np.asarray(mad_gemm_int8(pw, jnp.asarray(a))),
+            _oracle(tw.values, tw.scale, a), rtol=1e-5, atol=1e-5,
+        )
+
+    def test_mad_float_close(self):
+        """MAD fp32 path skips act quant → only close, not exact."""
+        tw, a = _mk(20, 40, 7)
+        pw = pack_weight(tw.values, tw.scale, "auto")
+        out = np.asarray(mad_gemm(pw, jnp.asarray(a)))
+        want = _oracle(tw.values, tw.scale, a)
+        np.testing.assert_allclose(out, want, rtol=0.1, atol=0.15)
+
+
+class TestAutoSwitch:
+    """Paper §6.3: scalar/vector switching by token count."""
+
+    def test_matches_oracle_both_regimes(self):
+        from repro.core import lut_gemm_auto
+
+        tw, _ = _mk(24, 40, 1)
+        pw = pack_weight(tw.values, tw.scale, "auto")
+        for n in (1, 4, 16):
+            _, a = _mk(24, 40, n, seed=n)
+            out = np.asarray(lut_gemm_auto(pw, jnp.asarray(a)))
+            want = _oracle(tw.values, tw.scale, a)
+            np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
