@@ -1,15 +1,22 @@
-"""Benchmark utilities: wall-clock timing of jit'd callables + CSV emission.
+"""Benchmark utilities: wall-clock timing of jit'd callables + CSV/JSON
+emission.
 
 Output contract (consumed by benchmarks.run): one CSV line per measurement,
     name,us_per_call,derived
 where `derived` is a benchmark-specific figure of merit (runs/s, tokens/s,
-GB/s, speedup, …).
+GB/s, speedup, …). Every `emit` is also buffered; `write_results(suite)`
+dumps the buffered rows (plus backend metadata) to ``BENCH_<suite>.json`` so
+headline numbers — e.g. the gemm fusion speedup — are tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
+
+#: rows buffered by emit(); flushed per-suite by write_results()
+_ROWS: list[dict] = []
 
 
 def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> float:
@@ -27,5 +34,57 @@ def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> float:
     return times[len(times) // 2]
 
 
-def emit(name: str, seconds: float, derived: str = "") -> None:
+def time_paired(
+    fns: dict, *args, warmup: int = 1, rounds: int = 9, calls: int = 3
+) -> dict:
+    """Noise-robust A/B timing for shared/throttled hosts: interleave the
+    variants (alternating order each round), time *batches* of `calls`
+    back-to-back calls so CPU-quota throttle periods average into every
+    sample instead of randomly hitting one arm, and take the per-variant
+    median sample. Returns seconds per single call."""
+    samples: dict = {name: [] for name in fns}
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    names = list(fns)
+    for r in range(rounds):
+        order = names if r % 2 == 0 else names[::-1]
+        for name in order:
+            t0 = time.perf_counter()
+            for _ in range(calls):
+                out = fns[name](*args)
+            jax.block_until_ready(out)
+            samples[name].append((time.perf_counter() - t0) / calls)
+    return {
+        name: sorted(ts)[len(ts) // 2] for name, ts in samples.items()
+    }
+
+
+def emit(name: str, seconds: float, derived: str = "", **extra) -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    _ROWS.append(
+        dict(name=name, us_per_call=seconds * 1e6, derived=derived, **extra)
+    )
+
+
+def write_results(suite: str, path: str | None = None) -> str | None:
+    """Flush ALL buffered rows to BENCH_<suite>.json (cwd).
+
+    Suites run sequentially (benchmarks.run flushes after each), so the
+    buffer holds exactly the current suite's rows; flushing everything —
+    rather than prefix-filtering — keeps the buffer from accumulating rows
+    of suites that never flush themselves. No-op (returns None) when the
+    buffer is empty, so a suite that already flushed isn't overwritten."""
+    global _ROWS
+    rows, _ROWS = _ROWS, []
+    if not rows:
+        return None
+    path = path or f"BENCH_{suite}.json"
+    payload = {
+        "suite": suite,
+        "backend": jax.default_backend(),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

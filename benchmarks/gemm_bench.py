@@ -1,13 +1,27 @@
-"""mpGeMM kernel benchmark — paper Fig. 9 (+ Fig. 4 BPW comparison).
+"""mpGeMM kernel benchmark — paper Fig. 9 (+ Fig. 4 BPW comparison) and the
+fused-pipeline ablation from the single-pass refactor.
 
 Measures runs/s of the Vec-LUT mpGeMM (I1 b1.60 / I2 b2.00) against the
 paper's baselines (scalar-LUT à la T-MAC, MAD int8 à la bitnet.cpp I2_S, MAD
 dequant-f32 à la llama.cpp TQ) on real-model GeMM shapes across parallel
 token counts N. On this CPU host the *relative* ordering reproduces the
 paper's qualitative claims (vector ≥ scalar for N ≥ 8; LUT ≥ MAD at ≤2 bpw).
+
+The ``--fusion`` ablation compares the fused single-pass pipeline against
+the original multi-pass one on the backend's kernel: on TPU both arms are
+the real Pallas kernels (`vlut_mpgemm(fusion=...)`); elsewhere the unfused
+arm stages the pipeline as *separate dispatches* (quantize → int gemm →
+dequant) with each intermediate genuinely materialized — XLA fuses
+anything inside one jit (it even elides optimization_barrier), so only
+real dispatch boundaries reproduce what the old pipeline paid. Two columns
+per cell: paired batched wall clock (runs/s) and the exact bytes of the
+intermediates the single-pass kernel eliminates (int8 activation buffer,
+int32 output, and — for Pallas impls — the de-interleaved layout copy).
+Rows land in BENCH_gemm.json via benchmarks.common.
 """
 from __future__ import annotations
 
+import argparse
 import functools
 
 import jax
@@ -22,7 +36,9 @@ from repro.core import (
     ternary_quantize,
     vlut_gemm,
 )
-from .common import emit, time_fn
+from repro.kernels import vlut_mpgemm
+from repro.kernels.ops import on_tpu
+from .common import emit, time_fn, time_paired, write_results
 
 # (M, K) from the evaluated models: T-MAC Table 1 (BitNet 3B) + Llama3-8B
 SHAPES = [
@@ -32,6 +48,15 @@ SHAPES = [
     ("llama3-8b", 4096, 4096),
 ]
 NS = [1, 8, 32, 128]
+#: fusion-ablation cells: edge-scale layer GeMMs (the paper's deployment
+#: regime) in the parallel-token range the fusion serves — where the
+#: eliminated dispatches + intermediate passes are large relative to the
+#: weight-decode compute, so the win clears shared-host timing noise.
+FUSION_SHAPES = [
+    ("edge-s", 160, 1280),
+    ("edge-m", 512, 2048),
+]
+FUSION_NS = [32, 128, 256]
 
 
 def _methods(pw_i1, pw_i2):
@@ -44,7 +69,103 @@ def _methods(pw_i1, pw_i2):
     }
 
 
-def run(quick: bool = True):
+def _eliminated_bytes(m: int, k: int, n: int, impl: str) -> int:
+    """Exact per-call HBM bytes of the intermediates the fused single-pass
+    kernel never materializes — each written by one stage and read by the
+    next (2× apiece): the (K, N) int8 activation buffer and the (M, N)
+    int32 output; Pallas impls additionally drop the (K, N)-sized
+    de-interleaved layout copy (the XLA stand-in never materialized one)."""
+    layout = 2 * k * n if impl != "xla" else 0
+    return 2 * k * n + layout + 2 * 4 * m * n
+
+
+def _staged_unfused(pw, impl: str):
+    """The unfused pipeline staged at its real boundaries — quantize (int8
+    activation buffer), int gemm (int32 output), dequant — as *separate
+    dispatches* with each intermediate genuinely materialized. On TPU the
+    Pallas pallas_call boundary provides that materialization from within
+    one jit (`vlut_mpgemm(fusion='unfused')`); XLA-on-CPU fuses anything
+    inside one jit (it even elides optimization_barrier), so the stand-in
+    must stage real dispatch boundaries. Both arms run the identical gemm
+    graph (`_segment_gemm_int(impl='xla')`), so the measured delta is
+    exactly what stage fusion buys on this backend."""
+    from repro.core.quantize import act_quant_tokens
+    from repro.kernels import ops as kops
+
+    segs = kops._segments(pw)
+    w_scale = kops._w_scale(pw)
+
+    quant = jax.jit(act_quant_tokens)
+
+    @jax.jit
+    def gemm(a_q):
+        out = None
+        for packed, lo, hi, g in segs:
+            part = kops._segment_gemm_int(packed, a_q[lo:hi], g, impl, False, None)
+            out = part if out is None else out + part
+        return out
+
+    dequant = jax.jit(
+        lambda o, s: o.astype(jnp.float32) * w_scale[:, None] * s[None, :]
+    )
+
+    def run(a):
+        q, s = quant(a)
+        return dequant(gemm(q), s)
+
+    return run
+
+
+def fusion_ablation(quick: bool = True, fusion: str = "both"):
+    """fused vs unfused single-pass pipeline (the PR's --fusion column)."""
+    shapes = FUSION_SHAPES
+    ns = FUSION_NS[:2] if quick else FUSION_NS
+    variants = ["fused", "unfused"] if fusion == "both" else [fusion]
+    impl = "decode" if on_tpu() else "xla"
+    rng = np.random.default_rng(0)
+    rows = []
+    for model, m, k in shapes:
+        w = rng.standard_normal((m, k)).astype(np.float32)
+        tw = ternary_quantize(jnp.asarray(w))
+        pw = pack_weight(tw.values, tw.scale, "auto")
+        unfused_run = _staged_unfused(pw, impl)
+        for n in ns:
+            a = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+            fns = {}
+            if "fused" in variants:
+                fns["fused"] = functools.partial(
+                    vlut_mpgemm, pw, impl=impl, fusion="fused"
+                )
+            if "unfused" in variants:
+                fns["unfused"] = (
+                    unfused_run if impl == "xla"
+                    else functools.partial(
+                        vlut_mpgemm, pw, impl=impl, fusion="unfused"
+                    )
+                )
+            secs = time_paired(fns, a, rounds=9 if quick else 13)
+            saved = _eliminated_bytes(m, k, n, impl)
+            for v in variants:
+                emit(
+                    f"gemm/fusion/{model}_{m}x{k}/N{n}/{v}",
+                    secs[v],
+                    f"{1.0 / secs[v]:.1f} runs/s",
+                    fusion=v, impl=impl, m=m, k=k, n=n,
+                )
+            if len(variants) == 2:
+                speed = secs["unfused"] / secs["fused"]
+                emit(
+                    f"gemm/fusion_speedup/{model}_{m}x{k}/N{n}",
+                    secs["fused"],
+                    f"{speed:.2f}x {saved / 1e6:.2f}MB-eliminated",
+                    impl=impl, m=m, k=k, n=n,
+                    speedup=speed, traffic_saved_bytes=saved,
+                )
+                rows.append((model, m, k, n, speed, saved))
+    return rows
+
+
+def run(quick: bool = True, fusion: str = "both"):
     shapes = SHAPES[:2] if quick else SHAPES
     ns = NS[:3] if quick else NS
     rng = np.random.default_rng(0)
@@ -56,7 +177,6 @@ def run(quick: bool = True):
         pw_i2 = pack_weight(tw.values, tw.scale, "i2")
         for n in ns:
             a = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
-            base_s = None
             for name, fn in _methods(pw_i1, pw_i2).items():
                 s = time_fn(fn, a, warmup=1, repeats=3)
                 runs = 1.0 / s
@@ -73,8 +193,17 @@ def run(quick: bool = True):
                 d["vlut_i2"],
                 f"{d['scalar_lut_i2'] / d['vlut_i2']:.2f}x",
             )
+    fusion_ablation(quick=quick, fusion=fusion)
+    write_results("gemm")
     return rows
 
 
 if __name__ == "__main__":
-    run(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger shapes/sweeps")
+    ap.add_argument(
+        "--fusion", default="both", choices=["fused", "unfused", "both"],
+        help="fused-pipeline ablation arm(s) to measure",
+    )
+    args = ap.parse_args()
+    run(quick=not args.full, fusion=args.fusion)

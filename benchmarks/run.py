@@ -53,6 +53,11 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
+        finally:
+            # flush any rows the suite buffered but didn't write itself
+            from . import common
+
+            common.write_results(name)
     sys.exit(1 if failures else 0)
 
 

@@ -19,6 +19,8 @@ from .quantize import (
     QuantizedActivation,
     TernaryWeight,
     act_quant_int8,
+    act_quant_tokens,
+    act_token_scale,
     fake_act_quant,
     fake_ternary,
     fake_ternary_cols,
@@ -44,7 +46,8 @@ from .baselines import (
 __all__ = [
     "GROUP_SIZES", "PackedWeight", "pack_group_sizes", "pack_ternary",
     "pack_weight", "sign_matrix", "unpack_ternary",
-    "QuantizedActivation", "TernaryWeight", "act_quant_int8", "fake_act_quant",
+    "QuantizedActivation", "TernaryWeight", "act_quant_int8",
+    "act_quant_tokens", "act_token_scale", "fake_act_quant",
     "fake_ternary", "fake_ternary_cols", "ternary_dequantize", "ternary_quantize",
     "lookup_accumulate", "max_block_int16", "precompute_lut",
     "precompute_lut_naive", "precompute_lut_topological", "vlut_gemm",

@@ -85,6 +85,29 @@ def act_quant_int8(a: jax.Array, axis: int = -1) -> QuantizedActivation:
     return QuantizedActivation(q, scale)
 
 
+def act_token_scale(a: jax.Array) -> jax.Array:
+    """Per-token scale for a token-minor (K, N) activation → (N,) f32.
+
+    The single shared definition of the mpGeMM quantizer scale: the fused
+    kernels (which quantize tile-by-tile in VMEM), the unfused pipeline, the
+    reference oracle and core.vlut all derive from it, so every path rounds
+    identically.
+    """
+    amax = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=0)
+    return jnp.maximum(amax, EPS) / Q_MAX
+
+
+def act_quant_tokens(a: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Materialized per-token int8 quantization of a token-minor (K, N)
+    activation → (a_q int8 (K, N), a_scale f32 (N,)). Used by the unfused
+    ablation pipeline and the pure-jnp reference paths; the fused kernels
+    take only `act_token_scale` and quantize in VMEM."""
+    a = a.astype(jnp.float32)
+    scale = act_token_scale(a)
+    q = jnp.clip(jnp.round(a / scale[None, :]), -Q_MAX, Q_MAX).astype(jnp.int8)
+    return q, scale
+
+
 def fake_act_quant(a: jax.Array, axis: int = -1) -> jax.Array:
     """STE int8 activation fake-quant (training path)."""
     q = act_quant_int8(a, axis)

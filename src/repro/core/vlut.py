@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .packing import PackedWeight, sign_matrix
+from .quantize import act_quant_int8, act_quant_tokens
 
 
 def max_block_int16(g: int) -> int:
@@ -254,14 +255,12 @@ def vlut_gemm(
     if not token_contiguous:
         # Feature-contiguous compute order: quantize & index along the hostile
         # axis so every token touches strided memory (scalar-LUT-style layout).
-        a_ft = a.T                                                    # (N, K)
-        amax = jnp.max(jnp.abs(a_ft), axis=-1)
-        a_scale = jnp.maximum(amax, 1e-6) / 127.0                     # (N,)
-        a_q = jnp.clip(jnp.round(a_ft / a_scale[:, None]), -127, 127).astype(jnp.int8).T
+        qa = act_quant_int8(a.T, axis=-1)                             # (N, K)
+        a_q = qa.values.T
+        a_scale = qa.scale[:, 0]                                      # (N,)
     else:
-        amax = jnp.max(jnp.abs(a), axis=0)
-        a_scale = jnp.maximum(amax, 1e-6) / 127.0                     # (N,)
-        a_q = jnp.clip(jnp.round(a / a_scale[None, :]), -127, 127).astype(jnp.int8)
+        # Shared per-token quantizer (same rounding as the kernels/oracle).
+        a_q, a_scale = act_quant_tokens(a)
 
     def run(a_q_chunk):
         out = jnp.zeros((pw.M, a_q_chunk.shape[1]), jnp.int32)

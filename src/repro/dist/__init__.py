@@ -1,0 +1,14 @@
+"""repro.dist — distribution layer: sharding rules, gradient compression,
+fault tolerance.
+
+  sharding         — name-based PartitionSpec rules for params / optimizer
+                     states / serving caches / batches, plus the activation
+                     constraint helper `shard_act` and the trace-time
+                     `use_sharding_ctx` context the models read.
+  compression      — int8 + error-feedback gradient compression for the
+                     accumulation boundary and a compressed-psum pattern.
+  fault_tolerance  — preemption guard, straggler monitor, bounded restarts.
+"""
+from . import compression, fault_tolerance, sharding
+
+__all__ = ["compression", "fault_tolerance", "sharding"]

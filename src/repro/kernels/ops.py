@@ -1,22 +1,35 @@
 """Public jit'd wrappers around the Vec-LUT TPU kernels.
 
+The hot path is **single-pass** (paper §3.3 "fused activation and output
+transformation"): float activations go straight into the Pallas kernel, which
+quantizes each (bkg, bn) tile against the per-token scale in VMEM (prologue),
+de-interleaves in registers from the free (K//g, g, N) row-major view, and
+applies the w_scale × a_scale dequant epilogue on the last K grid step —
+emitting f32/bf16 directly. The only HBM tensors are the packed weights, the
+float activation, and the float output: no int8 activation buffer, no
+de-interleave rematerialization, no int32 output round-trip.
+
 Responsibilities:
-  * the fused Vector-LUT-centric layout transformation (paper §3.3): token
-    flattening + transpose to token-minor + per-group de-interleave, fused by
-    XLA into the activation-quantization epilogue;
-  * padding to block multiples (padded K-groups carry the all-zero-trit code
-    so they contribute exactly 0);
-  * TPU-adapted tile-size selection (paper §4 rules, VMEM instead of L1);
-  * backend dispatch: Pallas kernels on TPU (or interpret=True for CPU
+  * per-token activation scale (one cheap reduction; shared with the QAT
+    path via core.quantize.act_token_scale) + padding to block multiples
+    (padded K-groups carry the all-zero-trit code so they contribute 0;
+    padded tokens carry a_scale = 1, padded rows w_scale = 0);
+  * tile-size selection through kernels/autotune.py (measured, disk-cached;
+    the static §4 heuristic `select_tiles` is the cold-cache fallback);
+  * backend dispatch: fused Pallas kernels on TPU (or interpret=True for CPU
     validation), and a shardable pure-XLA streamed-decode path used by the
     multi-device dry-run (pjit-friendly, identical semantics);
-  * scale application (per-channel weight scale × per-token activation scale).
+  * the `fusion="unfused"` ablation path: the original three-pass pipeline
+    (XLA quantize → de-interleave/pad → int kernel → dequant), kept for
+    benchmarks/gemm_bench.py --fusion and as a parity oracle.
 
 The packed-serving path is inference-only by design (training runs the QAT
-fake-quant dense path; see repro/models/bitlinear.py), so no custom_vjp here.
+fake-quant dense path; see repro/models/common.py), so no custom_vjp here.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
 from typing import Literal
 
@@ -24,38 +37,83 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.packing import PackedWeight
-from .ternary_decode_gemm import ternary_decode_gemm
-from .vlut_lookup_gemm import vlut_lookup_gemm
+from repro.core.quantize import act_quant_tokens, act_token_scale
+from . import autotune
+from .ternary_decode_gemm import ternary_decode_gemm, ternary_decode_gemm_fused
+from .vlut_lookup_gemm import vlut_lookup_gemm, vlut_lookup_gemm_fused
 
 _R = 3
 
 Impl = Literal["decode", "lookup", "xla"]
+Fusion = Literal["fused", "unfused"]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def select_tiles(g: int, impl: Impl, vmem_budget_bytes: int = 4 * 2**20):
-    """TPU adaptation of paper §4 tile-size selection.
+def select_tiles(g: int, impl: Impl, vmem_budget_bytes: int = autotune.VMEM_BUDGET_BYTES):
+    """Static §4 tile heuristic (delegates to autotune.heuristic_tiles).
 
-    N_tile: minimal multiple of the 128-lane vector width that still feeds
-    the MXU (paper: minimal multiple of SIMD width) → 128 for lookup, 256 for
-    decode (bigger N amortizes the decode).
-    K_tile: for 'lookup', the streamed table T (3^g · bkg · bn · 2B) must fit
-    the VMEM budget (paper: 3^g · N_tile · K_tile/g < L1); for 'decode' the
-    A tile (g · bkg · bn) dominates → bkg 128–256.
+    Kept public as the autotuner's cold-cache fallback; measured winners come
+    from kernels/autotune.get_tiles / tune.
     """
-    if impl == "lookup":
-        bn = 128
-        bkg = max(8, vmem_budget_bytes // (_R ** g * bn * 2))
-        bkg = min(128, 1 << (bkg.bit_length() - 1))                 # pow2 clamp
-        return dict(bm=128, bn=bn, bkg=bkg)
-    return dict(bm=128, bn=256, bkg=128)
+    return autotune.heuristic_tiles(g, impl, vmem_budget_bytes)
 
 
+# --------------------------------------------------------------------------
+# dispatch configuration (the serve/model-facing routing knobs)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class DispatchConfig:
+    """Process-wide defaults for `ternary_matmul` routing. `impl=None` picks
+    the backend default (fused Pallas decode on TPU, streamed XLA elsewhere)."""
+    impl: Impl | None = None
+    fusion: Fusion = "fused"
+    interpret: bool = False
+
+
+_dispatch = DispatchConfig()
+
+
+def dispatch_config() -> DispatchConfig:
+    return _dispatch
+
+
+_DISPATCH_FIELDS = tuple(f.name for f in dataclasses.fields(DispatchConfig))
+
+
+def configure_dispatch(**kw) -> DispatchConfig:
+    """Set process-wide dispatch defaults (serve entrypoints call this).
+    None values are ignored; unknown knobs raise."""
+    for k, v in kw.items():
+        if k not in _DISPATCH_FIELDS:
+            raise TypeError(f"unknown dispatch knob {k!r}; have {_DISPATCH_FIELDS}")
+        if v is not None:
+            setattr(_dispatch, k, v)
+    return _dispatch
+
+
+@contextlib.contextmanager
+def dispatch_override(**kw):
+    """Temporarily override dispatch defaults (None values are ignored)."""
+    saved = {f: getattr(_dispatch, f) for f in _DISPATCH_FIELDS}
+    try:
+        configure_dispatch(**kw)
+        yield _dispatch
+    finally:
+        for f, v in saved.items():
+            setattr(_dispatch, f, v)
+
+
+# --------------------------------------------------------------------------
+# layout / padding helpers
+# --------------------------------------------------------------------------
 def _deinterleave(a_q: jax.Array, g: int) -> jax.Array:
-    """(K, N) → (g, K//g, N): A_r[j, k, :] = A[k*g+j, :] (§3.3 layout)."""
+    """(K, N) → (g, K//g, N): A_r[j, k, :] = A[k*g+j, :] (§3.3 layout).
+
+    Only the *unfused* ablation path materializes this — the fused kernels
+    consume the zero-copy (K//g, g, N) view and transpose in VMEM."""
     K, N = a_q.shape
     return a_q.reshape(K // g, g, N).transpose(1, 0, 2)
 
@@ -69,6 +127,28 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     return jnp.pad(x, widths, constant_values=value)
 
 
+def _resolve_tiles(
+    g: int, impl: Impl, m: int, kg: int, n: int,
+    *, fused: bool, interpret: bool, tiles: dict | None,
+) -> dict:
+    """Per-segment tile resolution: explicit override > autotune cache >
+    §4 heuristic (see kernels/autotune.py).
+
+    A fully-specified override skips the autotuner entirely — essential for
+    the autotuner's own timing benchmark (segment_mpgemm), which would
+    otherwise re-enter tune() for the very key it is measuring."""
+    if tiles and all(k in tiles for k in ("bm", "bn", "bkg")):
+        return dict(tiles)
+    t = autotune.get_tiles(g, impl, m, kg, n, fused=fused, interpret=interpret)
+    if tiles:
+        t = dict(t)
+        t.update(tiles)
+    return t
+
+
+# --------------------------------------------------------------------------
+# per-segment kernels (one homogeneous g)
+# --------------------------------------------------------------------------
 def _segment_gemm_int(
     packed: jax.Array,
     a_q_seg: jax.Array,
@@ -77,7 +157,7 @@ def _segment_gemm_int(
     interpret: bool,
     tiles: dict | None,
 ) -> jax.Array:
-    """One homogeneous-g segment: packed (M, KG) uint8 × a_q_seg (K, N) int8
+    """Unfused integer segment: packed (M, KG) uint8 × a_q_seg (K, N) int8
     → (M, N) int32, dispatched to the chosen kernel."""
     m, kg = packed.shape
     n = a_q_seg.shape[1]
@@ -86,15 +166,44 @@ def _segment_gemm_int(
         # dense tile stays small (the dry-run / pjit path).
         return _xla_streamed_decode(packed, a_q_seg, g)
 
-    t = dict(select_tiles(g, impl))
-    if tiles:
-        t.update(tiles)
+    t = _resolve_tiles(g, impl, m, kg, n, fused=False, interpret=interpret, tiles=tiles)
     zero_code = (_R ** g - 1) // 2
     packed_p = _pad_to(_pad_to(packed, 1, t["bkg"], value=zero_code), 0, 8)
     a_r = _deinterleave(a_q_seg, g)
     a_r = _pad_to(_pad_to(a_r, 1, t["bkg"]), 2, 128)
     fn = ternary_decode_gemm if impl == "decode" else vlut_lookup_gemm
     out = fn(packed_p, a_r, g=g, interpret=interpret, **t)
+    return out[:m, :n]
+
+
+def _segment_gemm_fused(
+    packed: jax.Array,
+    a_seg: jax.Array,
+    a_scale: jax.Array,
+    w_scale: jax.Array,
+    g: int,
+    impl: Impl,
+    interpret: bool,
+    tiles: dict | None,
+    out_dtype,
+) -> jax.Array:
+    """Single-pass fused segment: packed (M, KG) uint8 × a_seg (K, N) float
+    → (M, N) out_dtype, with quantization + de-interleave + dequantization
+    inside the kernel. a_scale: (N,) f32 per-token; w_scale: (M,) f32."""
+    m, kg = packed.shape
+    n = a_seg.shape[1]
+    t = _resolve_tiles(g, impl, m, kg, n, fused=True, interpret=interpret, tiles=tiles)
+    zero_code = (_R ** g - 1) // 2
+    packed_p = _pad_to(_pad_to(packed, 1, t["bkg"], value=zero_code), 0, 8)
+    a3 = a_seg.reshape(kg, g, n)                   # free row-major view of (K, N)
+    a3 = _pad_to(_pad_to(a3, 0, t["bkg"]), 2, 128)
+    a_scale_p = _pad_to(a_scale[None, :], 1, 128, value=1.0)
+    w_scale_p = _pad_to(w_scale[:, None], 0, 8, value=0.0)
+    fn = ternary_decode_gemm_fused if impl == "decode" else vlut_lookup_gemm_fused
+    out = fn(
+        packed_p, a3, a_scale_p, w_scale_p,
+        g=g, out_dtype=out_dtype, interpret=interpret, **t,
+    )
     return out[:m, :n]
 
 
@@ -125,6 +234,12 @@ def _xla_streamed_decode(
 
 
 def _decode_dot(packed: jax.Array, a_q: jax.Array, g: int) -> jax.Array:
+    """Decode to a dense int8 tile, then one dot. A per-trit-position dot
+    (the Pallas decode kernel's structure) is ~1.3× faster on pre-quantized
+    int8 inputs, but in the *fused* graph its g operand reads make XLA
+    re-fuse (recompute) the activation quantization per trit position —
+    measured net loss; the single-consumer form keeps quantize computed
+    once."""
     codes = packed.astype(jnp.int32)                                 # (M, KG)
     trits = (codes[..., None] // (_R ** jnp.arange(g, dtype=jnp.int32))) % _R - 1
     w_t = trits.reshape(packed.shape[0], packed.shape[1] * g).astype(jnp.int8)
@@ -134,7 +249,29 @@ def _decode_dot(packed: jax.Array, a_q: jax.Array, g: int) -> jax.Array:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret", "out_dtype"))
+def _segments(pw: PackedWeight):
+    """[(packed, col_start, col_stop, g)] for the non-empty segments."""
+    segs = []
+    if pw.packed5.shape[-1]:
+        segs.append((pw.packed5, 0, pw.k5, 5))
+    if pw.packed4.shape[-1]:
+        segs.append((pw.packed4, pw.k5, pw.k5 + pw.k4, 4))
+    return segs
+
+
+def _w_scale(pw: PackedWeight) -> jax.Array:
+    return (
+        pw.scale if pw.scale.shape[-1] == pw.M
+        else jnp.broadcast_to(pw.scale, (pw.M,))
+    )
+
+
+# --------------------------------------------------------------------------
+# public mpGeMM entry points
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("impl", "interpret", "out_dtype", "fusion")
+)
 def vlut_mpgemm(
     pw: PackedWeight,
     a: jax.Array,
@@ -142,31 +279,121 @@ def vlut_mpgemm(
     impl: Impl = "decode",
     interpret: bool = False,
     out_dtype=jnp.float32,
+    fusion: Fusion = "fused",
 ) -> jax.Array:
-    """Kernel-backed mpGeMM. a: (K, N) float, token-contiguous → (M, N)."""
-    amax = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=0)
-    a_scale = jnp.maximum(amax, 1e-6) / 127.0
-    a_q = jnp.clip(jnp.round(a / a_scale[None, :]), -127, 127).astype(jnp.int8)
-    out = jnp.zeros((pw.M, a.shape[1]), jnp.int32)
-    if pw.packed5.shape[-1]:
-        out = out + _segment_gemm_int(pw.packed5, a_q[: pw.k5], 5, impl, interpret, None)
-    if pw.packed4.shape[-1]:
-        out = out + _segment_gemm_int(pw.packed4, a_q[pw.k5:], 4, impl, interpret, None)
-    w_scale = pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))
-    return (out.astype(jnp.float32) * w_scale[:, None] * a_scale[None, :]).astype(out_dtype)
+    """Kernel-backed mpGeMM. a: (K, N) float, token-contiguous → (M, N).
+
+    fusion="fused" (default) runs the single-pass kernel; "unfused" runs the
+    original multi-pass pipeline, whose stage boundaries are real HBM
+    materializations for the Pallas impls (XLA quantize → pallas_call →
+    XLA dequant). The two are numerically identical up to f32 summation
+    order when the weight has both a g=5 and a g=4 segment, bit-identical
+    otherwise. For impl="xla" there is no Pallas stage and XLA fuses freely
+    inside one jit (optimization_barrier is elided on CPU), so both fusion
+    arms compile to the same graph here — the benchmark's unfused-xla
+    ablation arm stages separate dispatches instead (gemm_bench.py).
+    """
+    n = a.shape[1]
+    segs = _segments(pw)
+    if fusion == "fused" and impl != "xla":
+        a_f = a if jnp.issubdtype(a.dtype, jnp.floating) else a.astype(jnp.float32)
+        a_scale = act_token_scale(a_f)                               # (N,)
+        w_scale = _w_scale(pw)
+        seg_dtype = out_dtype if len(segs) == 1 else jnp.float32
+        parts = [
+            _segment_gemm_fused(
+                packed, a_f[lo:hi], a_scale, w_scale, g, impl, interpret,
+                None, seg_dtype,
+            )
+            for packed, lo, hi, g in segs
+        ]
+        if not parts:
+            return jnp.zeros((pw.M, n), out_dtype)
+        out = parts[0] if len(parts) == 1 else sum(parts).astype(out_dtype)
+        return out
+
+    # fusion="unfused" (or impl="xla"): the original three-pass pipeline —
+    # materialized int8 activations, de-interleave layout pass (Pallas impls),
+    # int32 kernel output, separate dequant. For the Pallas kernels each
+    # stage boundary is a real HBM materialization (pallas_call in/out); for
+    # impl="xla" inside one jit XLA fuses freely, so the *benchmark* stages
+    # the unfused ablation as separate dispatches (see gemm_bench.py).
+    a_q, a_scale = act_quant_tokens(a)
+    out = jnp.zeros((pw.M, n), jnp.int32)
+    for packed, lo, hi, g in segs:
+        out = out + _segment_gemm_int(packed, a_q[lo:hi], g, impl, interpret, None)
+    w_scale = _w_scale(pw)
+    return (
+        out.astype(jnp.float32) * w_scale[:, None] * a_scale[None, :]
+    ).astype(out_dtype)
 
 
-def ternary_matmul(pw: PackedWeight, x: jax.Array, impl: Impl | None = None) -> jax.Array:
+@functools.partial(
+    jax.jit,
+    static_argnames=("g", "impl", "fused", "interpret", "tiles_t", "out_dtype"),
+)
+def _segment_mpgemm_jit(
+    packed, a, *, g, impl, fused, interpret, tiles_t, out_dtype
+):
+    tiles = dict(tiles_t) if tiles_t else None
+    a_scale = act_token_scale(a)
+    m = packed.shape[0]
+    if fused and impl != "xla":
+        w_scale = jnp.ones((m,), jnp.float32)
+        return _segment_gemm_fused(
+            packed, a, a_scale, w_scale, g, impl, interpret, tiles, out_dtype
+        )
+    a_q, a_scale = act_quant_tokens(a)
+    out = _segment_gemm_int(packed, a_q, g, impl, interpret, tiles)
+    return (out.astype(jnp.float32) * a_scale[None, :]).astype(out_dtype)
+
+
+def segment_mpgemm(
+    packed: jax.Array,
+    a: jax.Array,
+    g: int,
+    impl: Impl,
+    *,
+    fused: bool = True,
+    interpret: bool = False,
+    tiles: dict | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """One homogeneous-g mpGeMM with unit weight scale — the autotuner's
+    timing target (explicit `tiles` override, fused/unfused selectable)."""
+    tiles_t = tuple(sorted(tiles.items())) if tiles else None
+    return _segment_mpgemm_jit(
+        packed, a, g=g, impl=impl, fused=fused, interpret=interpret,
+        tiles_t=tiles_t, out_dtype=out_dtype,
+    )
+
+
+def ternary_matmul(
+    pw: PackedWeight,
+    x: jax.Array,
+    impl: Impl | None = None,
+    fusion: Fusion | None = None,
+) -> jax.Array:
     """Model-facing packed linear:  y(..., M) = x(..., K) · Wᵀ.
 
-    Fuses the token-first layout transformation (flatten tokens → transpose to
-    token-minor) around the kernel, per paper §3.3 "Fused activation and
-    output transformation". Chooses the Pallas kernel on TPU and the
-    shardable XLA streamed-decode elsewhere (incl. the multi-pod dry-run).
+    Fuses the token-first layout transformation (flatten tokens → transpose
+    to token-minor) around the kernel, per paper §3.3. Routing comes from the
+    process DispatchConfig (see `configure_dispatch`/`dispatch_override`):
+    by default the fused single-pass Pallas kernel on TPU (tiles from the
+    autotuner) and the shardable XLA streamed-decode elsewhere (incl. the
+    multi-pod dry-run). serve/engine.py prefill and decode land here for
+    every BitLinear.
     """
+    cfg = _dispatch
     if impl is None:
-        impl = "decode" if on_tpu() else "xla"
+        impl = cfg.impl if cfg.impl is not None else (
+            "decode" if (on_tpu() or cfg.interpret) else "xla"
+        )
+    fusion = fusion if fusion is not None else cfg.fusion
     lead = x.shape[:-1]
     a = x.reshape(-1, x.shape[-1]).T                                 # (K, N) token-minor
-    out = vlut_mpgemm(pw, a, impl=impl, out_dtype=x.dtype)           # (M, N)
+    out = vlut_mpgemm(
+        pw, a, impl=impl, interpret=cfg.interpret, out_dtype=x.dtype,
+        fusion=fusion,
+    )                                                                # (M, N)
     return out.T.reshape(*lead, pw.M)

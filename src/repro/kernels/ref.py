@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.packing import PackedWeight, unpack_ternary
+from repro.core.quantize import act_quant_tokens
 
 
 def ref_segment_gemm_int(packed: jax.Array, a_q: jax.Array, g: int) -> jax.Array:
@@ -37,9 +38,7 @@ def ref_mpgemm_int(pw: PackedWeight, a_q: jax.Array) -> jax.Array:
 
 def ref_mpgemm(pw: PackedWeight, a: jax.Array) -> jax.Array:
     """Float end-to-end reference (per-token int8 act quant + dequant)."""
-    amax = jnp.max(jnp.abs(a.astype(jnp.float32)), axis=0)
-    a_scale = jnp.maximum(amax, 1e-6) / 127.0
-    a_q = jnp.clip(jnp.round(a / a_scale[None, :]), -127, 127).astype(jnp.int8)
+    a_q, a_scale = act_quant_tokens(a)
     out = ref_mpgemm_int(pw, a_q)
     w_scale = (
         pw.scale if pw.scale.shape[-1] == pw.M else jnp.broadcast_to(pw.scale, (pw.M,))

@@ -255,7 +255,14 @@ def parse_hlo_stats(text: str) -> HloStats:
                 if mb:
                     tc = trip_count(mc.group(1)) if mc else 1.0
                     pending.append((mb.group(1), m * tc))
-            elif op.kind in ("fusion", "call", "custom-call", "reduce",
+            elif op.kind == "call":
+                # plain `call` is real top-level code (e.g. the CPU backend's
+                # parallelization wrapper around fusions), not an element-wise
+                # body: descend with the caller's multiplier so materializing
+                # ops inside still count traffic.
+                for mm in re.finditer(r"to_apply=%?([\w.\-]+)", attrs):
+                    pending.append((mm.group(1), m))
+            elif op.kind in ("fusion", "custom-call", "reduce",
                              "map", "scatter", "select-and-scatter", "sort"):
                 for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", attrs):
                     fusion_parent_mult[mm.group(1)] += m

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import decode_step as model_decode
 from repro.models import init_cache, prefill as model_prefill
 from .sampling import sample
@@ -50,10 +51,19 @@ class Engine:
         enc_len: int = 0,
         temperature: float = 0.0,
         seed: int = 0,
+        mpgemm_impl: str | None = None,
+        mpgemm_fusion: str | None = None,
+        mpgemm_interpret: bool | None = None,
     ):
         self.params = params
         self.cfg = cfg
         self.mode = mode
+        # mpGeMM routing for every BitLinear this engine traces: by default
+        # the fused single-pass kernel on TPU / streamed XLA elsewhere; the
+        # knobs force e.g. the interpreted fused path for CPU validation.
+        self._mpgemm = dict(
+            impl=mpgemm_impl, fusion=mpgemm_fusion, interpret=mpgemm_interpret
+        )
         self.max_slots = max_slots
         self.max_len = max_len
         self.temperature = temperature
@@ -112,7 +122,8 @@ class Engine:
                 single,
             )
         tok = jnp.asarray(tok)
-        logits, single = self._prefill1(self.params, single, tok)
+        with kernel_ops.dispatch_override(**self._mpgemm):
+            logits, single = self._prefill1(self.params, single, tok)
         self.prefill_tokens += int(tok.shape[1])
         self._slot_cache(slot, single)
         nxt = self._sample(logits)
@@ -132,7 +143,8 @@ class Engine:
         """One batched decode step over every active slot."""
         if not self.active.any():
             return
-        logits, self.cache = self._decode(self.params, self.cache, self.last_token)
+        with kernel_ops.dispatch_override(**self._mpgemm):
+            logits, self.cache = self._decode(self.params, self.cache, self.last_token)
         nxt = np.asarray(self._sample(logits))                       # (B,)
         self.last_token = jnp.asarray(nxt)[:, None]
         now = time.perf_counter()

@@ -1,0 +1,87 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed in every
+environment this repo runs in; installing deps is not always possible).
+
+Implements exactly the surface the test-suite uses — ``given``, ``settings``,
+``strategies.integers`` and ``strategies.sampled_from`` — by running each
+property test over `max_examples` pseudo-random draws from a fixed seed.
+No shrinking, no database; failures report the drawn example in the assert
+traceback. conftest.py installs this into ``sys.modules`` only when the real
+package is unavailable.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(10_000):
+                v = self.sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict")
+
+        return _Strategy(draw)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self.sample(rng)))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._stub_settings = kwargs
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        lead = params[: len(params) - len(strats)]
+
+        def runner(*args):
+            n = getattr(fn, "_stub_settings", {}).get("max_examples", 20)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = [s.sample(rng) for s in strats]
+                fn(*args, *drawn)
+
+        # Expose only the non-drawn parameters (e.g. `self`) so pytest does
+        # not try to resolve the strategy args as fixtures.
+        runner.__signature__ = sig.replace(parameters=lead)
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco
+
+
+def install(sys_modules) -> None:
+    """Register the stub as `hypothesis` / `hypothesis.strategies`."""
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    sys_modules["hypothesis"] = hyp
+    sys_modules["hypothesis.strategies"] = st

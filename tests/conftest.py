@@ -1,5 +1,22 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 real device;
 multi-device sharding tests spawn subprocesses with their own flags."""
+import pathlib
+import sys
+
+# `python -m pytest` from the repo root must find the src layout without a
+# manually exported PYTHONPATH (subprocess tests still set PYTHONPATH=src
+# explicitly for their children).
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:  # property tests prefer the real package when present
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - env-dependent
+    import _hypothesis_stub
+
+    _hypothesis_stub.install(sys.modules)
+
 import numpy as np
 import pytest
 
