@@ -1,8 +1,15 @@
 """Parallel decoding + continuous batching — paper Fig. 11 / §5.3.2.
 
-(i) batched decode throughput across batch sizes (paper Fig. 11);
+(i)  batched decode throughput across batch sizes (paper Fig. 11);
 (ii) a mixed continuous-batching run (prefill+decode interleaved) reporting
-     total/prefill/decode tok/s — the paper's 273.5 tok/s experiment shape.
+     total/prefill/decode tok/s and median TTFT — the paper's 273.5 tok/s
+     experiment shape;
+(iii) the same workload under speculative decoding (n-gram drafter),
+     reporting tokens/step and acceptance rate.
+
+All rows land in BENCH_decode.json via benchmarks.common (parity with
+gemm_bench), with tokens/s, TTFT, and acceptance-rate columns machine-
+readable in `extra` fields.
 """
 from __future__ import annotations
 
@@ -13,9 +20,35 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import decode_step, init_cache, init_lm, pack_params, prefill
 from repro.serve import ContinuousBatchingScheduler, Engine, Request
-from .common import emit, time_fn
+from repro.spec import SpecConfig
+from .common import emit, time_fn, write_results
 
 BATCHES = [1, 4, 8, 16]
+
+
+def _mixed_requests(rng, cfg, n_req):
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, size=16).astype(np.int32),
+            max_new_tokens=16,
+        )
+        for i in range(n_req)
+    ]
+
+
+def _serve_run(params, cfg, reqs, *, spec=None, slots=4, max_len=96):
+    # Warm THE SAME engine with a throwaway request: each Engine owns its own
+    # jax.jit closures, so warming a separate instance leaves the timed one
+    # to re-trace/re-compile inside the measured region (~150x on first add).
+    eng = Engine(params, cfg, max_slots=slots, max_len=max_len, spec=spec)
+    warm = ContinuousBatchingScheduler(eng)
+    warm.submit([Request(rid=-1, prompt=reqs[0].prompt.copy(), max_new_tokens=2)])
+    warm.run_to_completion()
+    eng.reset_stats()
+    sched = ContinuousBatchingScheduler(eng)
+    sched.submit(reqs)
+    return sched.run_to_completion()
 
 
 def run(quick: bool = True):
@@ -34,32 +67,53 @@ def run(quick: bool = True):
         one = jnp.asarray(rng.integers(0, cfg.vocab, (b, 1)), jnp.int32)
         fn = jax.jit(lambda p, c, t: decode_step(p, t, c, cfg, mode="serve"))
         sec = time_fn(fn, params, cache, one, warmup=1, repeats=5)
-        emit(f"decode/batch{b}", sec, f"{b / sec:.1f} tok/s")
+        emit(f"decode/batch{b}", sec, f"{b / sec:.1f} tok/s",
+             batch=b, tok_s=b / sec)
 
     # ---- §5.3.2: continuous batching --------------------------------------
-    eng = Engine(params, cfg, max_slots=4, max_len=96)
-    sched = ContinuousBatchingScheduler(eng)
     n_req = 8 if quick else 32
-    reqs = [
-        Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab, size=16).astype(np.int32),
-            max_new_tokens=16,
-        )
-        for i in range(n_req)
-    ]
-    # warmup compile with one throwaway request
-    w = ContinuousBatchingScheduler(Engine(params, cfg, max_slots=4, max_len=96))
-    w.submit([Request(rid=-1, prompt=reqs[0].prompt.copy(), max_new_tokens=2)])
-    w.run_to_completion()
-    sched.submit(reqs)
-    stats = sched.run_to_completion()
+    reqs = _mixed_requests(rng, cfg, n_req)
+
+    def fresh():
+        return [
+            Request(rid=r.rid, prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens)
+            for r in reqs
+        ]
+
+    stats = _serve_run(params, cfg, fresh())
+    ttft_ms = 1e3 * float(np.median(stats.ttft_s)) if stats.ttft_s else 0.0
     emit(
         "continuous_batching/total", stats.wall_s,
         f"{stats.throughput_tok_s:.1f} tok/s "
         f"(prefill {stats.prefill_tok_s:.1f} decode {stats.decode_tok_s:.1f}) "
-        f"completed {stats.completed}/{n_req}",
+        f"ttft {ttft_ms:.0f}ms completed {stats.completed}/{n_req}",
+        tok_s=stats.throughput_tok_s,
+        prefill_tok_s=stats.prefill_tok_s,
+        decode_tok_s=stats.decode_tok_s,
+        ttft_median_ms=ttft_ms,
+        completed=stats.completed,
     )
+
+    # ---- speculative continuous batching: same workload, spec on ----------
+    spec_stats = _serve_run(params, cfg, fresh(), spec=SpecConfig(k=4))
+    spec_ttft = (
+        1e3 * float(np.median(spec_stats.ttft_s)) if spec_stats.ttft_s else 0.0
+    )
+    emit(
+        "continuous_batching/spec_k4", spec_stats.wall_s,
+        f"{spec_stats.throughput_tok_s:.1f} tok/s "
+        f"{spec_stats.decode_tokens_per_step:.2f} tok/step "
+        f"accept {spec_stats.acceptance_rate:.2f} "
+        f"completed {spec_stats.completed}/{n_req}",
+        tok_s=spec_stats.throughput_tok_s,
+        decode_tok_s=spec_stats.decode_tok_s,
+        ttft_median_ms=spec_ttft,
+        acceptance_rate=spec_stats.acceptance_rate,
+        tokens_per_step=spec_stats.decode_tokens_per_step,
+        completed=spec_stats.completed,
+    )
+    write_results("decode")
     return stats
 
 

@@ -7,6 +7,8 @@ Mapping to the paper:
   gemm_bench       Fig. 9 / Fig. 4    mpGeMM kernel vs baselines
   prefill_bench    Fig. 10 / Fig. 13  e2e prefill tokens/s
   decode_bench     Fig. 11 / §5.3.2   parallel decode + continuous batching
+  spec_bench       §5.3 multi-token   speculative decoding: K×batch sweep +
+                                      scalar-vs-vector verify GeMMs
   breakdown_bench  Tables 1 & 5       stage time breakdown
   ablation_bench   Fig. 12 / §5.5     technique ablation + tile sweep
   packing_bench    Table 3 / §3.3     bpw compactness & shape support
@@ -32,12 +34,14 @@ def main() -> None:
         packing_bench,
         prefill_bench,
         roofline_report,
+        spec_bench,
     )
 
     suites = {
         "gemm": gemm_bench,
         "prefill": prefill_bench,
         "decode": decode_bench,
+        "spec": spec_bench,
         "breakdown": breakdown_bench,
         "ablation": ablation_bench,
         "packing": packing_bench,

@@ -1,0 +1,161 @@
+"""Speculative decoding benchmark — draft length K × batch sweep.
+
+Three arms, all landing in BENCH_spec.json via benchmarks.common:
+
+  (i)  verify-GeMM scaling: one verify step turns each slot's decode GeMM
+       from M=1 into M=K+1 parallel tokens — exactly the 1→N regime the
+       paper's vector lookup targets. We time the fused Vec-LUT mpGeMM
+       against the scalar-LUT baseline (T-MAC-style 1→1 lookups) on a
+       layer-shaped GeMM at N = batch·(K+1) and report the vector/scalar
+       speedup ("the N-scaling advantage on verification").
+  (ii) end-to-end speculative serving: Engine(spec=SpecConfig(k=K)) with the
+       n-gram drafter over repetitive prompts, sweeping K × batch; rows
+       report decode tok/s, tokens/step, and acceptance rate.
+  (iii) the self-draft oracle (ModelDrafter wrapping the target's own
+       params): acceptance is 1.0 by construction, so tokens/step == K+1 —
+       the verification-side ceiling once drafting is free and perfect.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack_weight, scalar_lut_gemm, ternary_quantize, vlut_gemm
+from repro.kernels import vlut_mpgemm
+from repro.kernels.ops import on_tpu
+from repro.models import init_lm, pack_params
+from repro.configs import get_config
+from repro.serve import Request
+from repro.spec import SpecConfig
+from .common import emit, time_fn, time_paired, write_results
+from .decode_bench import _serve_run
+
+KS = [2, 4, 8]
+BATCHES = [1, 4]
+#: slot batches for the verify-GeMM arm — N = batch·(K+1) parallel tokens,
+#: the regime where the paper's vector-vs-scalar crossover (N ≥ 8) shows
+GEMM_BATCHES = [4, 16]
+#: verify-GeMM shape: an edge-scale layer (M_out, K_in) from the paper's regime
+GEMM_SHAPE = (160, 1280)
+
+
+# --------------------------------------------------------------------------
+# (i) scalar vs vector LUT on verify-shaped GeMMs
+# --------------------------------------------------------------------------
+def _bench_verify_gemm(quick: bool):
+    m_out, k_in = GEMM_SHAPE
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(m_out, k_in)), jnp.float32)
+    tw = ternary_quantize(w)
+    pw = pack_weight(tw.values, tw.scale, "i2")
+    for b in GEMM_BATCHES[:1] if quick else GEMM_BATCHES:
+        for k in KS:
+            n = b * (k + 1)                     # parallel tokens one verify sees
+            a = jnp.asarray(rng.normal(size=(k_in, n)), jnp.float32)
+            secs = time_paired(
+                {
+                    "vector": lambda a_: vlut_gemm(pw, a_),
+                    "scalar": lambda a_: scalar_lut_gemm(pw, a_),
+                },
+                a, warmup=1, rounds=9, calls=3,
+            )
+            speedup = secs["scalar"] / secs["vector"]
+            emit(
+                f"verify_gemm/K{k}b{b}/vector", secs["vector"],
+                f"{speedup:.2f}x vs scalar", m=k + 1, n_tokens=n, arm="vector",
+            )
+            emit(
+                f"verify_gemm/K{k}b{b}/scalar", secs["scalar"], "",
+                m=k + 1, n_tokens=n, arm="scalar",
+            )
+            # the kernel the engine's verify pass actually dispatches to:
+            # fused single-pass Pallas on TPU, streamed XLA decode elsewhere
+            impl = "decode" if on_tpu() else "xla"
+            fused = time_fn(
+                lambda a_: vlut_mpgemm(pw, a_, impl=impl), a, warmup=1, repeats=3
+            )
+            emit(
+                f"verify_gemm/K{k}b{b}/engine_mpgemm", fused,
+                f"M={k + 1} via impl={impl}", m=k + 1, n_tokens=n, arm="engine",
+                impl=impl,
+            )
+
+
+# --------------------------------------------------------------------------
+# (ii)+(iii) end-to-end speculative serving
+# --------------------------------------------------------------------------
+def _repetitive_prompts(rng, n_req, vocab, length=16, period=4):
+    pat = rng.integers(0, vocab, size=period)
+    return [
+        np.tile(pat, length // period).astype(np.int32) for _ in range(n_req)
+    ]
+
+
+def _serve(params, cfg, prompts, *, spec, slots, max_new, max_len=128):
+    # _serve_run does a throwaway warmup pass first, so the timed region
+    # excludes the one-time jit compiles (which differ per draft length K)
+    return _serve_run(
+        params, cfg,
+        [Request(rid=i, prompt=p, max_new_tokens=max_new)
+         for i, p in enumerate(prompts)],
+        spec=spec, slots=slots, max_len=max_len,
+    )
+
+
+def _bench_engine(quick: bool):
+    cfg = get_config("smollm-360m", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    rng = np.random.default_rng(0)
+    max_new = 16 if quick else 32
+    batches = BATCHES[:1] if quick else BATCHES
+    ks = KS[:2] if quick else KS
+
+    for b in batches:
+        prompts = _repetitive_prompts(rng, 2 * b, cfg.vocab)
+        # non-speculative baseline
+        base = _serve(params, cfg, [p.copy() for p in prompts],
+                      spec=None, slots=b, max_new=max_new)
+        emit(
+            f"spec/baseline/b{b}", base.wall_s,
+            f"{base.decode_tok_s:.1f} decode tok/s", k=0, batch=b,
+            tokens_per_step=1.0, acceptance_rate=0.0,
+        )
+        for k in ks:
+            st = _serve(params, cfg, [p.copy() for p in prompts],
+                        spec=SpecConfig(k=k, drafter="ngram"),
+                        slots=b, max_new=max_new)
+            emit(
+                f"spec/ngram/K{k}b{b}", st.wall_s,
+                f"{st.decode_tok_s:.1f} decode tok/s, "
+                f"{st.decode_tokens_per_step:.2f} tok/step, "
+                f"accept {st.acceptance_rate:.2f}",
+                k=k, batch=b,
+                tokens_per_step=st.decode_tokens_per_step,
+                acceptance_rate=st.acceptance_rate,
+                spec_steps=st.spec_steps,
+            )
+        # oracle: self-draft with the target's own weights → accept-all
+        k = ks[-1]
+        st = _serve(params, cfg, [p.copy() for p in prompts],
+                    spec=SpecConfig(k=k, drafter="model",
+                                    draft_params=params, draft_cfg=cfg),
+                    slots=b, max_new=max_new)
+        emit(
+            f"spec/oracle/K{k}b{b}", st.wall_s,
+            f"{st.decode_tokens_per_step:.2f} tok/step ceiling, "
+            f"accept {st.acceptance_rate:.2f}",
+            k=k, batch=b,
+            tokens_per_step=st.decode_tokens_per_step,
+            acceptance_rate=st.acceptance_rate,
+        )
+
+
+def run(quick: bool = True):
+    _bench_verify_gemm(quick)
+    _bench_engine(quick)
+    write_results("spec")
+
+
+if __name__ == "__main__":
+    run(quick=False)

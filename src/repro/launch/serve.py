@@ -2,6 +2,9 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --requests 32 --max-new 16
+
+Add --spec-k N for speculative decoding (n-gram drafter, N draft tokens per
+batched verify step); the summary line then reports acceptance and tok/step.
 """
 import argparse
 
@@ -25,6 +28,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--no-pack", action="store_true",
                     help="serve the QAT (unpacked) weights for comparison")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding draft length (0 = off; "
+                         "n-gram prompt-lookup drafter)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -33,9 +39,14 @@ def main():
     if not args.no_pack:
         params = pack_params(params, cfg)
 
+    spec = None
+    if args.spec_k:
+        from repro.spec import SpecConfig
+
+        spec = SpecConfig(k=args.spec_k)
     engine = Engine(
         params, cfg, max_slots=args.slots, max_len=args.max_len,
-        temperature=args.temperature,
+        temperature=args.temperature, spec=spec,
     )
     sched = ContinuousBatchingScheduler(engine)
     rng = np.random.default_rng(0)
@@ -51,11 +62,19 @@ def main():
     ]
     sched.submit(reqs)
     stats = sched.run_to_completion()
+    spec_cols = (
+        f" accept={stats.acceptance_rate:.2f} "
+        f"tok/step={stats.decode_tokens_per_step:.2f}"
+        if stats.spec_steps else ""
+    )
+    rej_cols = f" rejected={stats.rejected}" if stats.rejected else ""
+    ttft_ms = 1e3 * float(np.median(stats.ttft_s)) if stats.ttft_s else 0.0
     print(
         f"completed={stats.completed}/{args.requests} "
         f"throughput={stats.throughput_tok_s:.1f} tok/s "
         f"(prefill {stats.prefill_tok_s:.1f}, decode {stats.decode_tok_s:.1f}) "
-        f"ttft_median={1e3 * float(np.median(stats.ttft_s)):.1f} ms"
+        f"ttft_median={ttft_ms:.1f} ms"
+        f"{spec_cols}{rej_cols}"
     )
 
 

@@ -10,6 +10,11 @@ from .decoder import (
     lm_logits,
     lm_loss,
     prefill,
+    prefill_bucket,
+    prefill_into_slot,
+    rollback_cache,
+    scatter_slot_cache,
+    verify_step,
 )
 from .encdec import encdec_init, encdec_loss, encode
 from .convert import pack_params, packed_param_bytes, param_count
@@ -17,7 +22,8 @@ from .convert import pack_params, packed_param_bytes, param_count
 __all__ = [
     "linear_apply", "linear_init", "rmsnorm_apply", "rope",
     "compress_layout", "decode_step", "init_cache", "init_lm", "lm_hidden",
-    "lm_logits", "lm_loss", "prefill",
+    "lm_logits", "lm_loss", "prefill", "prefill_bucket", "prefill_into_slot",
+    "rollback_cache", "scatter_slot_cache", "verify_step",
     "encdec_init", "encdec_loss", "encode",
     "pack_params", "packed_param_bytes", "param_count",
 ]

@@ -167,9 +167,20 @@ def attn_apply(
     mode: str,
     cache: Params | None = None,
     causal: bool = True,
+    verify: bool = False,
 ) -> tuple[jax.Array, Params | None]:
     """Self-attention. cache=None → pure (train/eval). Otherwise prefill
-    (S>1: fills cache from position cache.idx) or decode (S==1: appends)."""
+    (S>1: fills cache from position cache.idx) or decode (S==1: appends).
+
+    verify=True is the speculative multi-token decode step: S>1 incoming
+    tokens are appended to the cache and attend against the *full* cache
+    (prior context + themselves, position-causal) instead of the prefill
+    branch's within-sequence attention — see models.verify_step."""
+    if verify and spec.window:
+        raise ValueError(
+            "multi-token verification needs a rollbackable cache; windowed "
+            "(ring-buffer) layers would lose in-window history on rollback"
+        )
     b, s, _ = x.shape
     start = cache["idx"] if cache is not None else jnp.zeros((b,), jnp.int32)
     positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B,S)
@@ -213,7 +224,11 @@ def attn_apply(
             "slot_pos": sp,
             "idx": start + s,
         }
-        if s == 1:
+        if s == 1 or verify:
+            # decode / verify: the scatter above already wrote the incoming
+            # K/V, so attending (ck, cv) with slot positions covers both the
+            # cached prefix and the new tokens; causality comes from the
+            # position mask (kv_pos <= q_pos).
             out = sdpa(
                 q, ck, cv, positions, sp,
                 causal=causal, window=spec.window,

@@ -63,16 +63,25 @@ def block_apply(
     cache: Params | None = None,
     enc_out: jax.Array | None = None,
     causal: bool = True,
+    verify: bool = False,
 ):
     """→ (x, new_cache, aux_loss)."""
     h = rmsnorm_apply(p["mixer_norm"], x, cfg.norm_eps)
     if spec.mixer == "attn":
         y, new_cache = attn_apply(
-            p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache, causal=causal
+            p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache,
+            causal=causal, verify=verify,
         )
     elif spec.mixer == "mla":
-        y, new_cache = mla_apply(p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache)
+        y, new_cache = mla_apply(
+            p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache, verify=verify
+        )
     else:
+        if verify:
+            raise ValueError(
+                "multi-token verification needs a rollbackable cache; "
+                "ssm mixers carry recurrent state and cannot be verified"
+            )
         y, new_cache = ssm_apply(p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache)
     x = x + y
 

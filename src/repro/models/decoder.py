@@ -18,6 +18,7 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.dist.sharding import shard_act
 
@@ -87,6 +88,7 @@ def _stage_apply(
     cache: Params | None,
     enc_out: jax.Array | None,
     causal: bool,
+    verify: bool = False,
 ):
     has_cache = cache is not None
     carry_cache = has_cache and cfg.cache_in_carry
@@ -118,7 +120,7 @@ def _stage_apply(
                 )
                 x, nc, a = block_apply(
                     p_rep[f"b{i}"], x, cfg=cfg, spec=spec, mode=mode,
-                    cache=c, enc_out=enc_out, causal=causal,
+                    cache=c, enc_out=enc_out, causal=causal, verify=verify,
                 )
                 x = shard_act(x, "btd")
                 aux = aux + a
@@ -146,7 +148,7 @@ def _stage_apply(
             c = cache_rep[f"b{i}"] if has_cache else None
             x, nc, a = block_apply(
                 p_rep[f"b{i}"], x, cfg=cfg, spec=spec, mode=mode,
-                cache=c, enc_out=enc_out, causal=causal,
+                cache=c, enc_out=enc_out, causal=causal, verify=verify,
             )
             x = shard_act(x, "btd")
             aux = aux + a
@@ -198,9 +200,11 @@ def lm_hidden(
     cache: list | None = None,
     enc_out: jax.Array | None = None,
     causal: bool = True,
+    verify: bool = False,
 ):
     """inputs: int32 tokens (B, S) or pre-embedded (B, S, d) (stub frontends).
-    → (hidden (B,S,d), new_cache, aux_loss)."""
+    → (hidden (B,S,d), new_cache, aux_loss). verify=True: S>1 tokens are a
+    speculative decode step appended to the cache (see verify_step)."""
     if inputs.dtype in (jnp.int32, jnp.int64):
         x = embed_apply(params["embed"], inputs, cfg)
     else:
@@ -213,7 +217,7 @@ def lm_hidden(
         c = cache[si] if cache is not None else None
         x, aux, nc = _stage_apply(
             params["stages"][si], x, aux, cfg=cfg, pattern=pat, mode=mode,
-            cache=c, enc_out=enc_out, causal=causal,
+            cache=c, enc_out=enc_out, causal=causal, verify=verify,
         )
         new_cache.append(nc)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
@@ -299,3 +303,84 @@ def decode_step(params, tokens, cache, cfg, *, mode="serve"):
     h, new_cache, _ = lm_hidden(params, tokens, cfg, mode=mode, cache=cache)
     logits = _head_matmul(params, h[:, -1:, :], cfg)[:, 0]
     return logits, new_cache
+
+
+def verify_step(params, tokens, cache, cfg, *, mode="serve"):
+    """Batched multi-token decode — the speculative-verification step.
+
+    tokens: (B, S) int32 candidate tokens per slot (column 0 is the last
+    sampled token, columns 1..S-1 the drafted continuation). Every token is
+    appended to the slot KV cache at its per-slot position (cache idx) and
+    attends against the full cache, so logits[:, j] is exactly the
+    distribution a sequential decode would produce after processing
+    tokens[:, :j+1] — one batched M=S pass through the Vec-LUT mpGeMM
+    kernels instead of S sequential M=1 passes.
+
+    → (logits (B, S, V), new_cache with idx advanced by S). Rejected suffixes
+    are undone with rollback_cache. S is expected small (draft_k + 1): the
+    full (B, S, V) logits are materialized."""
+    h, new_cache, _ = lm_hidden(
+        params, tokens, cfg, mode=mode, cache=cache, verify=True
+    )
+    logits = _head_matmul(params, h, cfg)
+    return logits, new_cache
+
+
+def prefill_bucket(n: int) -> int:
+    """Pad prompt lengths to 16-multiples → one prefill jit entry per bucket
+    (left-padding gives pad tokens negative positions, masked everywhere)."""
+    return max(16, (n + 15) // 16 * 16)
+
+
+def prefill_into_slot(
+    params, cache, slot: int, prompt, cfg, *, max_len: int, prefill_fn,
+    exact_len: bool = False,
+):
+    """Admit one prompt into batched slot `slot`: B=1 bucketed left-padded
+    prefill (pad positions negative → masked; start idx set via
+    rollback_cache), scattered into the full cache. Shared by the serving
+    engine and the speculative ModelDrafter so their cache positions can
+    never drift apart. exact_len skips bucketing (ssm archs can't mask pads
+    inside the scan). prefill_fn: jit'd (params, single_cache, tokens) →
+    (logits, single_cache). → (logits, new_full_cache, padded_len)."""
+    n = len(prompt)
+    bucket = n if exact_len else prefill_bucket(n)
+    single = init_cache(cfg, 1, max_len)
+    if bucket != n:
+        single = rollback_cache(single, jnp.asarray([n - bucket]))
+    tok = np.zeros((1, bucket), np.int32)
+    tok[0, bucket - n:] = prompt
+    logits, single = prefill_fn(params, single, jnp.asarray(tok))
+    return logits, scatter_slot_cache(cache, single, slot), bucket
+
+
+def scatter_slot_cache(full_cache, single_cache, slot: int):
+    """Scatter a B=1 cache pytree into batched slot `slot` (axis 1 is the
+    batch axis under the stacked layer-repeat axis) — shared by the serving
+    engine and the speculative ModelDrafter's mirrored cache."""
+    def scat(full, one):
+        return jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, axis=1
+        )
+
+    return jax.tree.map(scat, full_cache, single_cache)
+
+
+def rollback_cache(cache, new_idx):
+    """Reset every per-slot cache write position to `new_idx` ((B,) int32) —
+    the KV rollback of speculative decoding.
+
+    Exact for full-buffer attention/MLA caches: entries past the restored idx
+    keep stale K/V, but their recorded positions exceed every future query
+    position until they are overwritten, and each forward scatters its new
+    K/V *before* attending — so position-masked attention never reads a stale
+    entry. Ring (windowed) caches and SSM state cannot be rolled back this
+    way; the serving engine refuses speculative decoding for those archs."""
+    new_idx = new_idx.astype(jnp.int32)
+
+    def fix(path, leaf):
+        if getattr(path[-1], "key", None) == "idx":
+            return jnp.broadcast_to(new_idx, leaf.shape).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, cache)

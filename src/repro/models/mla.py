@@ -112,7 +112,11 @@ def mla_apply(
     spec,
     mode: str,
     cache: Params | None = None,
+    verify: bool = False,
 ) -> tuple[jax.Array, Params | None]:
+    """verify=True runs the absorbed-latent decode path for S>1 incoming
+    tokens (speculative multi-token verification) with a per-query causal
+    position mask; without it S>1+cache means prefill (within-sequence)."""
     ql, kvl, nope, rp, vd = _dims(cfg)
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -136,7 +140,7 @@ def mla_apply(
             "idx": start + s,
         }
 
-    if cache is not None and s == 1:
+    if cache is not None and (s == 1 or verify):
         # ---- absorbed decode over the latent cache -----------------------
         wkv_b = _wkv_b_dense(p, cfg, jnp.float32)                    # (kvl,H,nope+vd)
         w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
@@ -149,8 +153,8 @@ def mla_apply(
             + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), krope_all)
         ) * scale
         kv_pos = jnp.arange(ckv_all.shape[1], dtype=jnp.int32)[None, :]
-        valid = kv_pos <= positions[:, :1]                           # (B,L)
-        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        valid = kv_pos[:, None, :] <= positions[:, :, None]          # (B,Sq,L)
+        scores = jnp.where(valid[:, None, :, :], scores, -1e30)     # (B,H,Sq,L)
         probs = jax.nn.softmax(scores, axis=-1)
         lat = jnp.einsum("bhqs,bsk->bqhk", probs, ckv_all)
         out = jnp.einsum("bqhk,khv->bqhv", lat, w_uv)                # (B,1,H,vd)

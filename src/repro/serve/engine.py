@@ -7,6 +7,13 @@ slots — llama.cpp's mixed prefill/decode policy, the workload on which the
 paper reports 273.5 tok/s. All shapes are static (JAX-compile-once): requests
 of different lengths coexist through per-slot `idx` positions and position-
 masked attention.
+
+With `spec=SpecConfig(...)` the decode step becomes speculative: a drafter
+proposes K tokens per slot, one batched `models.verify_step` runs the target
+over (B, K+1) candidates — the Vec-LUT mpGeMM kernels see M=K+1 parallel
+tokens instead of M=1 — and `sampling.accept_speculative` keeps the longest
+valid prefix, rolling the KV cache back past the first rejection. Greedy
+outputs are token-for-token identical to plain decoding.
 """
 from __future__ import annotations
 
@@ -22,7 +29,22 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
 from repro.models import decode_step as model_decode
 from repro.models import init_cache, prefill as model_prefill
-from .sampling import sample
+from repro.models import prefill_into_slot, rollback_cache
+from repro.models import verify_step as model_verify
+from repro.spec import SpecConfig
+from .sampling import accept_speculative, sample
+
+
+# single definitions of the speculative metrics, shared by Engine (live
+# counters) and ServeStats (per-run snapshot) so the two can never diverge
+def spec_acceptance_rate(accepted_tokens: int, drafted_tokens: int) -> float:
+    """Fraction of drafted tokens the target model accepted."""
+    return accepted_tokens / drafted_tokens if drafted_tokens else 0.0
+
+
+def spec_tokens_per_step(decode_tokens: int, spec_slot_steps: int) -> float:
+    """Mean tokens a slot emits per verify step (1..k+1; 1.0 unspeculated)."""
+    return decode_tokens / spec_slot_steps if spec_slot_steps else 1.0
 
 
 @dataclasses.dataclass
@@ -34,6 +56,7 @@ class Request:
     slot: int = -1
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: str = ""               # admission rejection reason (done, no output)
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
@@ -54,6 +77,7 @@ class Engine:
         mpgemm_impl: str | None = None,
         mpgemm_fusion: str | None = None,
         mpgemm_interpret: bool | None = None,
+        spec: SpecConfig | None = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -81,68 +105,117 @@ class Engine:
             lambda p, c, t: model_decode(p, t, c, cfg, mode=mode),
             donate_argnums=(1,),
         )
+        # speculative decoding (draft → verify → accept)
+        self.spec = spec
+        self.drafter = None
+        if spec is not None:
+            bad = [s.mixer for s in cfg.layer_specs() if s.mixer == "ssm"]
+            if bad:
+                raise ValueError(
+                    "speculative decoding needs rollbackable KV caches; "
+                    f"{cfg.name} has {len(bad)} ssm layer(s)"
+                )
+            if any(s.window for s in cfg.layer_specs()):
+                raise ValueError(
+                    "speculative decoding is exact only for full-buffer KV "
+                    f"caches; {cfg.name} has windowed (ring-cache) layers, "
+                    "whose in-window history a rollback would clobber"
+                )
+            self.drafter = spec.build(max_slots=max_slots, max_len=max_len, mode=mode)
+            self._verify = jax.jit(
+                lambda p, c, t: model_verify(p, t, c, cfg, mode=mode),
+                donate_argnums=(1,),
+            )
         # stats
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self.spec_steps = 0         # batched verify steps (engine ticks)
+        self.spec_slot_steps = 0    # per-slot verify steps (Σ active slots)
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
 
     # ------------------------------------------------------------------
-    def _slot_cache(self, slot: int, single_cache):
-        """Scatter a B=1 cache into batched slot `slot` (pure tree op)."""
-        def scat(full, one):
-            return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype), slot, axis=1)
+    @property
+    def _draft_k(self) -> int:
+        return self.spec.k if self.spec is not None else 0
 
-        self.cache = jax.tree.map(scat, self.cache, single_cache)
-
-    @staticmethod
-    def _bucket(n: int) -> int:
-        """Pad prompts to 16-multiples → one jit cache entry per bucket."""
-        return max(16, (n + 15) // 16 * 16)
+    def _validate(self, req: Request) -> None:
+        """Reject requests that would overflow the slot KV cache: the prompt
+        plus every decode position (and, speculatively, up to `k` draft
+        positions past the last kept token) must fit in max_len."""
+        need = len(req.prompt) + req.max_new_tokens + self._draft_k
+        if need > self.max_len:
+            extra = f" + draft window ({self._draft_k})" if self._draft_k else ""
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}){extra} = {need} "
+                f"exceeds max_len={self.max_len}; truncate the prompt, lower "
+                f"max_new_tokens, or grow the engine's max_len"
+            )
 
     def add(self, req: Request) -> bool:
-        """Prefill a request into a free slot. False if no slot free."""
+        """Prefill a request into a free slot. False if no slot free; raises
+        ValueError if the request cannot fit in max_len at all."""
+        self._validate(req)
         try:
             slot = self.slot_free.index(True)
         except ValueError:
             return False
         req.slot = slot
         req.t_submit = req.t_submit or time.perf_counter()
-        single = init_cache(self.cfg, 1, self.max_len)
-        # left-pad to the bucket: pad tokens get negative positions, which
-        # every attention mask drops (kv_pos >= 0) — no recompile per length.
         # SSM/hybrid archs can't mask pads inside the scan → exact lengths.
-        n = len(req.prompt)
         has_ssm = any(s.mixer == "ssm" for s in self.cfg.layer_specs())
-        bucket = n if has_ssm else self._bucket(n)
-        tok = np.zeros((1, bucket), np.int32)
-        tok[0, bucket - n:] = req.prompt
-        if bucket != n:
-            single = jax.tree_util.tree_map_with_path(
-                lambda p, l: (jnp.full_like(l, n - bucket)
-                              if getattr(p[-1], "key", None) == "idx" else l),
-                single,
-            )
-        tok = jnp.asarray(tok)
         with kernel_ops.dispatch_override(**self._mpgemm):
-            logits, single = self._prefill1(self.params, single, tok)
-        self.prefill_tokens += int(tok.shape[1])
-        self._slot_cache(slot, single)
+            logits, self.cache, padded = prefill_into_slot(
+                self.params, self.cache, slot, req.prompt, self.cfg,
+                max_len=self.max_len, prefill_fn=self._prefill1,
+                exact_len=has_ssm,
+            )
+        self.prefill_tokens += padded
         nxt = self._sample(logits)
         req.generated.append(int(nxt[0]))
         req.t_first_token = time.perf_counter()
         self.last_token = self.last_token.at[slot, 0].set(nxt[0])
+        if len(req.generated) >= req.max_new_tokens:
+            # prefill already produced everything asked for (max_new_tokens=1)
+            req.done = True
+            req.t_done = req.t_first_token
+            return True
         self.slot_free[slot] = False
         self.slot_req[slot] = req
         self.active[slot] = True
+        if self.drafter is not None:
+            self.drafter.on_admit(slot, req.prompt)
         return True
 
     def _sample(self, logits):
         self.rng, k = jax.random.split(self.rng)
         return sample(logits, k, temperature=self.temperature)
 
+    def _slot_exhausted(self, req: Request) -> bool:
+        """True when the slot has no room for another decode (or verify)
+        step: the next write position (+ draft window) would pass max_len.
+        Admission bounds this, but max_new_tokens is re-checked so a slot can
+        never scribble past its buffer."""
+        next_pos = len(req.prompt) + len(req.generated)  # last_token's slot
+        return next_pos + self._draft_k >= self.max_len
+
+    def _finish_slot(self, slot: int, req: Request, now: float):
+        req.done = True
+        req.t_done = now
+        self.active[slot] = False
+        self.slot_free[slot] = True
+        del self.slot_req[slot]
+        if self.drafter is not None:
+            self.drafter.on_release(slot)
+
     def decode_once(self):
-        """One batched decode step over every active slot."""
+        """One batched decode step over every active slot. With spec enabled
+        this is draft → verify → accept (1..k+1 tokens per slot)."""
         if not self.active.any():
             return
+        if self.spec is not None:
+            return self._decode_spec()
         with kernel_ops.dispatch_override(**self._mpgemm):
             logits, self.cache = self._decode(self.params, self.cache, self.last_token)
         nxt = np.asarray(self._sample(logits))                       # (B,)
@@ -153,13 +226,72 @@ class Engine:
                 continue
             self.decode_tokens += 1
             req.generated.append(int(nxt[slot]))
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                req.t_done = now
-                self.active[slot] = False
-                self.slot_free[slot] = True
-                del self.slot_req[slot]
+            if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
+                self._finish_slot(slot, req, now)
+
+    def _decode_spec(self):
+        """One speculative decode step: drafter proposal, a single batched
+        (B, K+1) verify pass through the Vec-LUT kernels, longest-accepted-
+        prefix emission, and KV rollback to the last kept position."""
+        k = self.spec.k
+        contexts: list = [None] * self.max_slots
+        pos = np.zeros(self.max_slots, np.int64)     # per-slot cache idx
+        for slot, req in self.slot_req.items():
+            if self.active[slot]:
+                contexts[slot] = np.concatenate(
+                    [np.asarray(req.prompt, np.int64), np.asarray(req.generated, np.int64)]
+                )
+                pos[slot] = len(req.prompt) + len(req.generated) - 1
+        draft = np.asarray(self.drafter.propose(contexts, k), np.int32)
+        tokens = jnp.concatenate([self.last_token, jnp.asarray(draft)], axis=1)
+        with kernel_ops.dispatch_override(**self._mpgemm):
+            logits, cache = self._verify(self.params, self.cache, tokens)
+        self.rng, key = jax.random.split(self.rng)
+        n_acc, out = accept_speculative(
+            jnp.asarray(draft), logits, key, temperature=self.temperature
+        )
+        n_acc, out = np.asarray(n_acc), np.asarray(out)
+        # free slots get an arbitrary idx (pos stays 0 for them): harmless —
+        # admission rescatters a complete fresh cache (idx included) before
+        # any reuse, and nothing reads a free slot's cache meanwhile.
+        new_idx = pos + k + 1
+        new_last = np.asarray(self.last_token).copy()
+        now = time.perf_counter()
+        for slot, req in list(self.slot_req.items()):
+            if not self.active[slot]:
+                continue
+            remaining = req.max_new_tokens - len(req.generated)
+            take = min(int(n_acc[slot]) + 1, remaining)
+            req.generated.extend(int(t) for t in out[slot, :take])
+            new_last[slot, 0] = out[slot, take - 1]
+            new_idx[slot] = pos[slot] + take
+            self.decode_tokens += take
+            self.spec_slot_steps += 1
+            self.drafted_tokens += k
+            # acceptance counts the verifier's verdict, not the emission cap:
+            # a request finishing mid-step still accepted n_acc draft tokens.
+            self.accepted_tokens += int(n_acc[slot])
+            if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
+                self._finish_slot(slot, req, now)
+        self.spec_steps += 1
+        self.last_token = jnp.asarray(new_last)
+        self.cache = rollback_cache(cache, jnp.asarray(new_idx))
+
+    def reset_stats(self):
+        """Zero the token/acceptance counters (e.g. after a warmup run, so a
+        timed run's stats exclude it). Slot/cache state is untouched."""
+        self.prefill_tokens = self.decode_tokens = 0
+        self.spec_steps = self.spec_slot_steps = 0
+        self.drafted_tokens = self.accepted_tokens = 0
 
     @property
     def n_active(self) -> int:
         return int(self.active.sum())
+
+    @property
+    def acceptance_rate(self) -> float:
+        return spec_acceptance_rate(self.accepted_tokens, self.drafted_tokens)
+
+    @property
+    def decode_tokens_per_step(self) -> float:
+        return spec_tokens_per_step(self.decode_tokens, self.spec_slot_steps)

@@ -1,4 +1,6 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k, plus the speculative-decoding
+acceptance rules (exact greedy matching and Leviathan-style rejection
+sampling over a verify step's (B, K+1, V) logits)."""
 from __future__ import annotations
 
 import jax
@@ -20,3 +22,75 @@ def sample(
         kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Speculative acceptance
+# --------------------------------------------------------------------------
+def greedy_accept(draft: jax.Array, target_tokens: jax.Array) -> jax.Array:
+    """Longest accepted draft prefix under exact greedy matching.
+
+    draft: (B, K) proposed tokens; target_tokens: (B, K+1) the target's
+    greedy picks at each verified position. Draft token j is accepted iff it
+    equals the target's pick after the j-1 previously accepted tokens.
+    → (B,) int32 in [0, K]."""
+    matches = (draft == target_tokens[:, :-1]).astype(jnp.int32)
+    return jnp.sum(jnp.cumprod(matches, axis=1), axis=1)
+
+
+def accept_speculative(
+    draft: jax.Array,
+    target_logits: jax.Array,
+    rng: jax.Array,
+    *,
+    temperature: float = 0.0,
+    draft_probs: jax.Array | None = None,
+):
+    """Acceptance rule over one verify step. → (n_accepted (B,), out (B, K+1)).
+
+    draft: (B, K) proposed tokens; target_logits: (B, K+1, V) from
+    models.verify_step (position j conditions on the last sampled token plus
+    draft[:, :j]). The caller emits out[:, :n_accepted+1]: the accepted
+    draft prefix followed by one bonus/correction token — every speculative
+    step advances at least one token.
+
+    temperature<=0: exact greedy matching — emitted tokens are token-for-token
+    what sequential greedy decode would produce.
+
+    temperature>0: Leviathan et al. rejection sampling. Accept draft token x
+    with prob min(1, p(x)/q(x)); on first rejection resample from the
+    normalized residual (p-q)+, after full acceptance sample the bonus from
+    the last position. q defaults to the one-hot proposal of a deterministic
+    (greedy/n-gram) drafter, in which case acceptance prob is p(x) and the
+    residual is p with x removed; pass draft_probs (B, K, V) for a stochastic
+    drafter. Either way emitted tokens are exact target-model samples."""
+    b, kp1, v = target_logits.shape
+    k = kp1 - 1
+    if temperature <= 0.0:
+        tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)   # (B, K+1)
+        return greedy_accept(draft, tgt), tgt
+
+    p = jax.nn.softmax(target_logits / temperature, axis=-1)         # (B,K+1,V)
+    p_k = p[:, :k]
+    p_draft = jnp.take_along_axis(p_k, draft[..., None], axis=-1)[..., 0]
+    if draft_probs is None:                       # deterministic proposal
+        q = jax.nn.one_hot(draft, v, dtype=p.dtype)
+        q_draft = jnp.ones_like(p_draft)
+    else:
+        q = draft_probs
+        q_draft = jnp.take_along_axis(q, draft[..., None], axis=-1)[..., 0]
+    rng_u, rng_r, rng_b = jax.random.split(rng, 3)
+    u = jax.random.uniform(rng_u, (b, k))
+    accept = (u < p_draft / jnp.maximum(q_draft, 1e-20)).astype(jnp.int32)
+    n_acc = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)             # (B,)
+    residual = jnp.maximum(p_k - q, 0.0)
+    rsum = jnp.sum(residual, axis=-1, keepdims=True)
+    residual = jnp.where(rsum > 0, residual / jnp.maximum(rsum, 1e-30), p_k)
+    resample = jax.random.categorical(
+        rng_r, jnp.log(jnp.maximum(residual, 1e-30)), axis=-1
+    )                                                                 # (B, K)
+    bonus = jax.random.categorical(rng_b, target_logits[:, -1] / temperature, axis=-1)
+    j = jnp.arange(k, dtype=n_acc.dtype)[None, :]
+    mid = jnp.where(j < n_acc[:, None], draft, resample).astype(jnp.int32)
+    out = jnp.concatenate([mid, bonus[:, None].astype(jnp.int32)], axis=1)
+    return n_acc, out

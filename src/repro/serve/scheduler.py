@@ -12,7 +12,7 @@ import time
 from collections import deque
 from typing import Iterable
 
-from .engine import Engine, Request
+from .engine import Engine, Request, spec_acceptance_rate, spec_tokens_per_step
 
 
 @dataclasses.dataclass
@@ -21,11 +21,25 @@ class ServeStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     completed: int = 0
+    rejected: int = 0               # failed admission (Request.error set)
     ttft_s: list = dataclasses.field(default_factory=list)
+    # speculative decoding (zero when the engine runs without spec=)
+    spec_steps: int = 0         # batched verify steps
+    spec_slot_steps: int = 0    # per-slot verify steps (Σ active slots)
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
 
     @property
     def total_tokens(self) -> int:
         return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def acceptance_rate(self) -> float:
+        return spec_acceptance_rate(self.accepted_tokens, self.drafted_tokens)
+
+    @property
+    def decode_tokens_per_step(self) -> float:
+        return spec_tokens_per_step(self.decode_tokens, self.spec_slot_steps)
 
     @property
     def throughput_tok_s(self) -> float:
@@ -44,7 +58,8 @@ class ContinuousBatchingScheduler:
     def __init__(self, engine: Engine):
         self.engine = engine
         self.queue: deque[Request] = deque()
-        self.completed: list[Request] = []
+        self.completed: list[Request] = []  # finished requests, in finish order
+        self.rejected: list[Request] = []   # failed admission (req.error set)
 
     def submit(self, reqs: Iterable[Request]):
         for r in reqs:
@@ -52,33 +67,54 @@ class ContinuousBatchingScheduler:
             self.queue.append(r)
 
     def tick(self):
-        """One scheduler iteration: ≤1 prefill admission + 1 decode step."""
-        if self.queue and self.engine.add(self.queue[0]):
-            self.queue.popleft()
-        before = set(self.engine.slot_req)
+        """One scheduler iteration: ≤1 prefill admission + 1 decode step.
+
+        A request the engine can never fit (prompt + budget > max_len) is
+        rejected in place — `error` set, `done` stays False, no output; see
+        `self.rejected` — so one bad request aborts itself, not the batch."""
+        if self.queue:
+            head = self.queue[0]
+            try:
+                if self.engine.add(head):
+                    self.queue.popleft()
+                    if head.done:      # satisfied by prefill alone
+                        self.completed.append(head)
+            except ValueError as e:
+                head.error = str(e)
+                self.rejected.append(head)
+                self.queue.popleft()
+        before = dict(self.engine.slot_req)
         self.engine.decode_once()
-        after = set(self.engine.slot_req)
-        for slot in before - after:
-            pass  # finished requests already detached by the engine
+        for slot in before.keys() - self.engine.slot_req.keys():
+            self.completed.append(before[slot])
 
     def run_to_completion(self, max_ticks: int = 100_000) -> ServeStats:
         t0 = time.perf_counter()
-        n_submitted = len(self.queue)
-        finished: list[Request] = []
         pending = lambda: self.queue or self.engine.n_active
         ticks = 0
-        all_reqs: list[Request] = list(self.queue)
         while pending() and ticks < max_ticks:
             self.tick()
             ticks += 1
         wall = time.perf_counter() - t0
+        # every request this scheduler has seen: finished (incl. by earlier
+        # manual ticks), still in flight, and never admitted
+        all_reqs: list[Request] = (
+            self.completed
+            + list(self.engine.slot_req.values())
+            + list(self.queue)
+        )
         stats = ServeStats(
             wall_s=wall,
             prefill_tokens=self.engine.prefill_tokens,
             decode_tokens=self.engine.decode_tokens,
             completed=sum(r.done for r in all_reqs),
+            rejected=len(self.rejected),
             ttft_s=[
                 r.t_first_token - r.t_submit for r in all_reqs if r.t_first_token
             ],
+            spec_steps=self.engine.spec_steps,
+            spec_slot_steps=self.engine.spec_slot_steps,
+            drafted_tokens=self.engine.drafted_tokens,
+            accepted_tokens=self.engine.accepted_tokens,
         )
         return stats

@@ -1,0 +1,41 @@
+"""repro.spec — speculative decoding on the Vec-LUT hot path.
+
+The serving engine's plain decode runs the target model one token per slot
+per tick, so the Vec-LUT mpGeMM kernels only ever see M=1 at decode time —
+the exact regime the paper's 1→N vector lookup was built to escape. This
+subsystem turns decode into draft → verify → accept: a cheap *drafter*
+proposes K candidate tokens per slot, one batched `models.verify_step` runs
+the target over all (B, K+1) candidates against the slot KV caches (the
+kernels see M=K+1 parallel tokens), and an acceptance rule keeps the longest
+valid prefix, rolling the caches back past the first rejection
+(`models.rollback_cache`).
+
+Components
+  * SpecConfig     — knobs: draft length `k`, drafter choice, n-gram window,
+                     draft-model params/config. `Engine(spec=SpecConfig(...))`
+                     switches `decode_once` to the speculative step.
+  * NgramDrafter   — prompt-lookup / self-drafting: matches the context's
+                     trailing n-gram against earlier context and proposes the
+                     historical continuation. No extra weights.
+  * ModelDrafter   — wraps a smaller ternary model (its own packed params +
+                     config) with a mirrored slot cache; drafts greedily and
+                     resyncs to the accepted tokens by the same rollback
+                     trick the target uses.
+
+Exactness: with greedy sampling the accepted tokens are token-for-token
+identical to non-speculative decoding (each verified position's logits
+depend only on the already-accepted prefix); with temperature sampling,
+`serve.sampling.accept_speculative` applies Leviathan-style rejection
+sampling so emitted tokens are distributed exactly as target-model samples.
+
+Rollback semantics: only the per-slot cache `idx` is restored — stale K/V
+past the restored index is never read (position-masked attention +
+scatter-before-attend), so rollback is O(1). This requires full-buffer
+attention or MLA caches; ring (windowed) caches and SSM state are refused at
+engine construction.
+"""
+from .config import SpecConfig
+from .drafter import Drafter, NgramDrafter
+from .model_drafter import ModelDrafter
+
+__all__ = ["SpecConfig", "Drafter", "NgramDrafter", "ModelDrafter"]

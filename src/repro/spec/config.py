@@ -1,0 +1,51 @@
+"""SpecConfig — the speculative-decoding knobs `Engine(spec=...)` consumes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Configuration for speculative decoding.
+
+    k            draft tokens proposed per verify step; each step runs the
+                 target once over (B, k+1) tokens and emits 1..k+1 of them.
+    drafter      'ngram' (prompt-lookup, no extra weights) | 'model' (a
+                 smaller ternary draft model).
+    ngram_max/min  longest/shortest suffix n-gram the NgramDrafter matches.
+    draft_params / draft_cfg  packed params + ModelConfig of the draft model
+                 (drafter='model' only). Passing the target's own params is
+                 the always-accept oracle — useful for benchmarking the
+                 verification ceiling.
+    """
+    k: int = 4
+    drafter: str = "ngram"
+    ngram_max: int = 3
+    ngram_min: int = 1
+    draft_params: Any = None
+    draft_cfg: Any = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+        if self.drafter not in ("ngram", "model"):
+            raise ValueError(
+                f"SpecConfig.drafter must be 'ngram' or 'model', got {self.drafter!r}"
+            )
+        if self.drafter == "model" and (
+            self.draft_params is None or self.draft_cfg is None
+        ):
+            raise ValueError("drafter='model' needs draft_params and draft_cfg")
+
+    def build(self, *, max_slots: int, max_len: int, mode: str = "serve"):
+        """Instantiate the configured drafter for an engine's slot layout."""
+        from .drafter import NgramDrafter
+        from .model_drafter import ModelDrafter
+
+        if self.drafter == "ngram":
+            return NgramDrafter(max_n=self.ngram_max, min_n=self.ngram_min)
+        return ModelDrafter(
+            self.draft_params, self.draft_cfg,
+            max_slots=max_slots, max_len=max_len, mode=mode,
+        )

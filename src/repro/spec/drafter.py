@@ -1,0 +1,64 @@
+"""Drafter protocol + the weight-free prompt-lookup (n-gram) drafter.
+
+A drafter proposes K candidate continuation tokens per active slot each
+decode tick. The engine hands it the full per-slot context (prompt +
+everything generated so far) and expects a dense (max_slots, K) proposal —
+static shapes keep the verify step compile-once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Drafter:
+    """Interface the engine drives. Subclasses override `propose`; the slot
+    lifecycle hooks are optional (stateless drafters ignore them)."""
+
+    def on_admit(self, slot: int, prompt: np.ndarray) -> None:
+        """A request was prefilled into `slot` (prompt = its tokens)."""
+
+    def on_release(self, slot: int) -> None:
+        """The request in `slot` finished; the slot will be reused."""
+
+    def propose(self, contexts: list, k: int) -> np.ndarray:
+        """contexts: one entry per slot — the full token context (prompt +
+        generated) as a 1-D int array for active slots, None for free slots.
+        → (max_slots, k) int32 draft tokens (free-slot rows are ignored)."""
+        raise NotImplementedError
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup / self-drafting (no extra weights): match the context's
+    trailing n-gram (n = max_n .. min_n) against earlier context; if it
+    recurred, propose the k tokens that followed its most recent earlier
+    occurrence. Repetition-heavy contexts — code, summarization, test-time
+    scaling loops re-reading their own output — hit constantly; the fallback
+    (repeat the last token) keeps shapes static when nothing matches."""
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(f"need 1 <= min_n <= max_n, got {min_n}..{max_n}")
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def _propose_one(self, ctx: np.ndarray, k: int) -> np.ndarray:
+        L = len(ctx)
+        for n in range(min(self.max_n, L - 1), self.min_n - 1, -1):
+            suffix = ctx[L - n:]
+            windows = np.lib.stride_tricks.sliding_window_view(ctx, n)
+            starts = np.nonzero((windows == suffix).all(axis=1))[0]
+            starts = starts[starts < L - n]          # drop the suffix itself
+            if starts.size:
+                cont = ctx[starts[-1] + n : starts[-1] + n + k]
+                out = np.full(k, cont[-1] if cont.size else ctx[-1], ctx.dtype)
+                out[: cont.size] = cont
+                return out
+        return np.full(k, ctx[-1], ctx.dtype)
+
+    def propose(self, contexts: list, k: int) -> np.ndarray:
+        out = np.zeros((len(contexts), k), np.int32)
+        for i, ctx in enumerate(contexts):
+            if ctx is None:
+                continue
+            out[i] = self._propose_one(np.asarray(ctx, np.int64), k)
+        return out

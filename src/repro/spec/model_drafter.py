@@ -1,0 +1,113 @@
+"""ModelDrafter — a smaller ternary draft model with a mirrored slot cache.
+
+The drafter owns its own packed params, ModelConfig, and a batched KV cache
+shaped like the engine's (max_slots, max_len). Each `propose` call:
+
+  1. *resync* — the tokens the target accepted since the last call (1..k+1 of
+     them per slot) are pushed through the draft model in ONE multi-token
+     `verify_step` (per-slot positions, padded to k+1 so the step is
+     compile-once), giving the first draft token from the final real
+     position's logits;
+  2. *draft* — k-1 greedy single-token decode steps extend the proposal;
+  3. *rollback* — the cache idx is restored to the accepted-token count
+     (`models.rollback_cache`), so speculated draft state never contaminates
+     the next resync. The same stale-entry safety argument as the target's
+     rollback applies (position-masked attention + scatter-before-attend).
+
+Greedy drafting makes the proposal deterministic, so rejection sampling
+treats it as a one-hot proposal distribution (see sampling.accept_speculative).
+Passing the target's own params/config yields the always-accept oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (
+    decode_step,
+    init_cache,
+    prefill,
+    prefill_into_slot,
+    rollback_cache,
+    verify_step,
+)
+
+from .drafter import Drafter
+
+
+class ModelDrafter(Drafter):
+    def __init__(self, params, cfg, *, max_slots: int, max_len: int, mode="serve"):
+        if any(s.mixer == "ssm" for s in cfg.layer_specs()):
+            raise ValueError("ModelDrafter needs a rollbackable cache; the "
+                             "draft config has ssm mixers")
+        if any(s.window for s in cfg.layer_specs()):
+            raise ValueError("ModelDrafter needs a rollbackable cache; the "
+                             "draft config has windowed (ring-cache) layers")
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, max_slots, max_len)
+        #: per-slot count of context tokens the draft cache has absorbed
+        self.synced = np.zeros(max_slots, np.int64)
+        self._prefill = jax.jit(
+            lambda p, c, t: prefill(p, t, c, cfg, mode=mode)
+        )
+        self._verify = jax.jit(
+            lambda p, c, t: verify_step(p, t, c, cfg, mode=mode),
+            donate_argnums=(1,),
+        )
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(p, t, c, cfg, mode=mode),
+            donate_argnums=(1,),
+        )
+
+    # ------------------------------------------------------------------
+    def on_admit(self, slot: int, prompt: np.ndarray) -> None:
+        # the same bucketed admission as Engine.add, so the draft cache's
+        # positions can never drift from the target's
+        _, self.cache, _ = prefill_into_slot(
+            self.params, self.cache, slot, prompt, self.cfg,
+            max_len=self.max_len, prefill_fn=self._prefill,
+        )
+        self.synced[slot] = len(prompt)
+
+    # ------------------------------------------------------------------
+    def propose(self, contexts: list, k: int) -> np.ndarray:
+        b = self.max_slots
+        pad = k + 1                     # max tokens a verify step can emit
+        tokens = np.zeros((b, pad), np.int32)
+        delta = np.ones(b, np.int64)
+        base = np.zeros(b, np.int64)
+        for i, ctx in enumerate(contexts):
+            if ctx is None:
+                continue
+            base[i] = self.synced[i]
+            d = len(ctx) - self.synced[i]
+            assert 1 <= d <= pad, (
+                f"slot {i}: draft cache out of sync ({d} unseen tokens, "
+                f"window {pad}) — was on_admit called?"
+            )
+            delta[i] = d
+            tokens[i, :d] = ctx[self.synced[i]:]
+            tokens[i, d:] = ctx[-1]     # pad; rolled back below
+        # 1. resync: absorb the accepted tokens, one multi-token step
+        logits, cache = self._verify(self.params, self.cache, jnp.asarray(tokens))
+        logits = np.asarray(logits)
+        draft = np.zeros((b, k), np.int32)
+        draft[:, 0] = np.argmax(
+            logits[np.arange(b), delta - 1], axis=-1
+        )
+        # keep only the real (accepted) tokens in the cache
+        cache = rollback_cache(cache, jnp.asarray(base + delta))
+        self.synced = base + delta
+        # 2. draft: k-1 greedy decode steps (positions continue per slot)
+        last = jnp.asarray(draft[:, :1])
+        for j in range(1, k):
+            step_logits, cache = self._decode(self.params, cache, last)
+            draft[:, j] = np.argmax(np.asarray(step_logits), axis=-1)
+            last = jnp.asarray(draft[:, j : j + 1])
+        # 3. rollback: drop the speculated draft state
+        self.cache = rollback_cache(cache, jnp.asarray(self.synced))
+        return draft

@@ -83,6 +83,119 @@ class TestEngine:
         assert eng.add(reqs[0]) and eng.add(reqs[1])
         assert not eng.add(reqs[2])  # no free slot
 
+    def test_engine_full_requeue(self, served, rng):
+        """Requests rejected while the engine is full stay queued (FCFS) and
+        are admitted as slots free up — nothing is lost or reordered."""
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=2, max_len=64)
+        sched = ContinuousBatchingScheduler(eng)
+        reqs = _requests(cfg, 6, rng, max_new=6)  # long enough to span the ticks
+        sched.submit(reqs)
+        sched.tick()  # one admission per tick → 4 still queued, engine full
+        assert len(sched.queue) == 5 and eng.n_active == 1
+        sched.tick()
+        assert len(sched.queue) == 4 and eng.n_active == 2
+        sched.tick()  # engine full: queue head must be retained, not dropped
+        assert len(sched.queue) == 4 and sched.queue[0].rid == reqs[2].rid
+        stats = sched.run_to_completion()
+        assert stats.completed == 6
+        assert all(r.done for r in reqs)
+
+    def test_slot_reuse_after_completion(self, served, rng):
+        """A freed slot is reused by a later request and its stale cache
+        content never leaks: the recycled request's output equals the same
+        request run on a fresh engine."""
+        cfg, params = served
+        prompts = [p.prompt for p in _requests(cfg, 3, rng)]
+        # fresh-engine reference for the LAST request
+        ref_eng = Engine(params, cfg, max_slots=1, max_len=64)
+        ref = Request(rid=99, prompt=prompts[-1], max_new_tokens=4)
+        ref_eng.add(ref)
+        while not ref.done:
+            ref_eng.decode_once()
+        # one slot services all three sequentially → slot 0 reused twice
+        eng = Engine(params, cfg, max_slots=1, max_len=64)
+        sched = ContinuousBatchingScheduler(eng)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        sched.submit(reqs)
+        stats = sched.run_to_completion()
+        assert stats.completed == 3
+        assert all(r.slot == 0 for r in reqs)
+        assert reqs[-1].generated == ref.generated
+
+    def test_mixed_lengths_share_one_jit_entry(self, served, rng):
+        """Prompts of different lengths inside one 16-bucket must share a
+        single prefill jit cache entry (left-padding, not recompilation)."""
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=4, max_len=64)
+        for i, n in enumerate([3, 9, 13, 16]):     # all bucket to 16
+            prompt = rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+            assert eng.add(Request(rid=i, prompt=prompt, max_new_tokens=2))
+        assert eng._prefill1._cache_size() == 1
+        # a second bucket adds exactly one more entry
+        eng2 = Engine(params, cfg, max_slots=4, max_len=64)
+        for i, n in enumerate([13, 21]):           # buckets 16 and 32
+            prompt = rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+            assert eng2.add(Request(rid=i, prompt=prompt, max_new_tokens=2))
+        assert eng2._prefill1._cache_size() == 2
+
+
+@pytest.mark.slow
+class TestAdmissionLimits:
+    def test_overflowing_request_rejected(self, served, rng):
+        """prompt + max_new_tokens > max_len must be refused on admission
+        with a clear error instead of silently wrapping the KV ring."""
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=1, max_len=32)
+        prompt = rng.integers(0, cfg.vocab, size=20).astype(np.int32)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.add(Request(rid=0, prompt=prompt, max_new_tokens=20))
+
+    def test_spec_budget_counts_draft_window(self, served, rng):
+        """With speculation the verify step writes up to k positions past the
+        last kept token — admission must reserve that headroom too."""
+        from repro.spec import SpecConfig
+
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=1, max_len=32, spec=SpecConfig(k=4))
+        prompt = rng.integers(0, cfg.vocab, size=20).astype(np.int32)
+        with pytest.raises(ValueError, match="draft window"):
+            eng.add(Request(rid=0, prompt=prompt, max_new_tokens=10))
+        # same request fits without speculation
+        eng2 = Engine(params, cfg, max_slots=1, max_len=32)
+        assert eng2.add(Request(rid=0, prompt=prompt.copy(), max_new_tokens=10))
+
+    def test_scheduler_rejects_oversized_in_place(self, served, rng):
+        """One impossible request must not abort the batch: the scheduler
+        marks it rejected (error set, no output) and keeps serving."""
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=1, max_len=32)
+        sched = ContinuousBatchingScheduler(eng)
+        mk = lambda rid, n, new: Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+            max_new_tokens=new)
+        good, bad, good2 = mk(0, 8, 4), mk(1, 30, 30), mk(2, 6, 4)
+        sched.submit([good, bad, good2])
+        stats = sched.run_to_completion()
+        assert stats.completed == 2 and stats.rejected == 1
+        assert good.done and good2.done
+        assert not bad.done and not bad.generated
+        assert "max_len" in bad.error and sched.rejected == [bad]
+
+    def test_fitting_request_completes_at_boundary(self, served, rng):
+        """A request that exactly fills max_len completes cleanly."""
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=1, max_len=32)
+        prompt = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=8)  # 24 + 8 == 32
+        assert eng.add(req)
+        for _ in range(16):
+            if req.done:
+                break
+            eng.decode_once()
+        assert req.done and len(req.generated) == 8
+
 
 @pytest.mark.slow
 def test_temperature_sampling_varies(served, rng):
