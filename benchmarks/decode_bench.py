@@ -37,11 +37,13 @@ def _mixed_requests(rng, cfg, n_req):
     ]
 
 
-def _serve_run(params, cfg, reqs, *, spec=None, slots=4, max_len=96):
+def _serve_run(params, cfg, reqs, *, spec=None, slots=4, max_len=96,
+               temperature=0.0, seed=0):
     # Warm THE SAME engine with a throwaway request: each Engine owns its own
     # jax.jit closures, so warming a separate instance leaves the timed one
     # to re-trace/re-compile inside the measured region (~150x on first add).
-    eng = Engine(params, cfg, max_slots=slots, max_len=max_len, spec=spec)
+    eng = Engine(params, cfg, max_slots=slots, max_len=max_len, spec=spec,
+                 temperature=temperature, seed=seed)
     warm = ContinuousBatchingScheduler(eng)
     warm.submit([Request(rid=-1, prompt=reqs[0].prompt.copy(), max_new_tokens=2)])
     warm.run_to_completion()

@@ -1,6 +1,6 @@
 """Speculative decoding benchmark — draft length K × batch sweep.
 
-Three arms, all landing in BENCH_spec.json via benchmarks.common:
+Five arms, all landing in BENCH_spec.json via benchmarks.common:
 
   (i)  verify-GeMM scaling: one verify step turns each slot's decode GeMM
        from M=1 into M=K+1 parallel tokens — exactly the 1→N regime the
@@ -14,6 +14,15 @@ Three arms, all landing in BENCH_spec.json via benchmarks.common:
   (iii) the self-draft oracle (ModelDrafter wrapping the target's own
        params): acceptance is 1.0 by construction, so tokens/step == K+1 —
        the verification-side ceiling once drafting is free and perfect.
+  (iv) adaptive-vs-fixed K on a mixed warm/cold workload (half repetitive
+       prompts the n-gram drafter feeds on, half adversarial random ones):
+       rows add per-slot mean k_eff and skip-rate columns, showing the
+       adaptive policy recovering plain-decode cost on the cold half.
+  (v)  stochastic-vs-greedy ModelDrafter proposals at temperature>0: greedy
+       drafting is scored as a one-hot proposal, stochastic drafting
+       (SpecConfig(stochastic=True)) samples at the serving temperature and
+       feeds its distributions to rejection sampling — the acceptance-rate
+       gap is the draft probability mass the greedy mode throws away.
 """
 from __future__ import annotations
 
@@ -92,14 +101,15 @@ def _repetitive_prompts(rng, n_req, vocab, length=16, period=4):
     ]
 
 
-def _serve(params, cfg, prompts, *, spec, slots, max_new, max_len=128):
+def _serve(params, cfg, prompts, *, spec, slots, max_new, max_len=128,
+           temperature=0.0):
     # _serve_run does a throwaway warmup pass first, so the timed region
     # excludes the one-time jit compiles (which differ per draft length K)
     return _serve_run(
         params, cfg,
         [Request(rid=i, prompt=p, max_new_tokens=max_new)
          for i, p in enumerate(prompts)],
-        spec=spec, slots=slots, max_len=max_len,
+        spec=spec, slots=slots, max_len=max_len, temperature=temperature,
     )
 
 
@@ -151,9 +161,86 @@ def _bench_engine(quick: bool):
         )
 
 
+# --------------------------------------------------------------------------
+# (iv) adaptive-vs-fixed K on a mixed warm/cold workload
+# --------------------------------------------------------------------------
+def _mixed_prompts(rng, n_req, vocab, length=16):
+    """Half repetitive (n-gram drafting feeds → warm acceptance), half
+    random (prompt lookup whiffs → cold acceptance)."""
+    warm = _repetitive_prompts(rng, n_req - n_req // 2, vocab, length=length)
+    cold = [rng.integers(0, vocab, size=length).astype(np.int32)
+            for _ in range(n_req // 2)]
+    return warm + cold
+
+
+def _emit_spec_row(name, st, *, k, batch, arm):
+    emit(
+        name, st.wall_s,
+        f"{st.decode_tok_s:.1f} decode tok/s, "
+        f"{st.decode_tokens_per_step:.2f} tok/step, "
+        f"accept {st.acceptance_rate:.2f}, mean_k {st.mean_draft_k:.2f}, "
+        f"skip {st.skip_rate:.2f}",
+        k=k, batch=batch, arm=arm,
+        tokens_per_step=st.decode_tokens_per_step,
+        acceptance_rate=st.acceptance_rate,
+        mean_draft_k=st.mean_draft_k,
+        skip_rate=st.skip_rate,
+        spec_steps=st.spec_steps,
+        spec_skipped_steps=st.spec_skipped_steps,
+    )
+
+
+def _bench_adaptive(quick: bool):
+    cfg = get_config("smollm-360m", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    rng = np.random.default_rng(1)
+    max_new = 16 if quick else 32
+    k = KS[1]
+    for b in BATCHES[:1] if quick else BATCHES:
+        prompts = _mixed_prompts(rng, 2 * b, cfg.vocab)
+        fixed = _serve(params, cfg, [p.copy() for p in prompts],
+                       spec=SpecConfig(k=k, drafter="ngram"),
+                       slots=b, max_new=max_new)
+        _emit_spec_row(f"spec/fixed_k/K{k}b{b}", fixed, k=k, batch=b,
+                       arm="fixed_k")
+        adapt = _serve(params, cfg, [p.copy() for p in prompts],
+                       spec=SpecConfig(k=k, drafter="ngram", adaptive_k=True,
+                                       skip_below=0.25, probe_every=4),
+                       slots=b, max_new=max_new)
+        _emit_spec_row(f"spec/adaptive_k/K{k}b{b}", adapt, k=k, batch=b,
+                       arm="adaptive_k")
+
+
+# --------------------------------------------------------------------------
+# (v) stochastic-vs-greedy ModelDrafter proposals at temperature>0
+# --------------------------------------------------------------------------
+def _bench_stochastic(quick: bool):
+    cfg = get_config("smollm-360m", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    rng = np.random.default_rng(2)
+    max_new, b, k, temp = (12 if quick else 24), 2, KS[0], 0.8
+    prompts = _repetitive_prompts(rng, 2 * b, cfg.vocab)
+    # self-draft keeps the arm about the proposal mode, not draft quality:
+    # stochastic proposals then satisfy q == p → acceptance 1.0 ceiling,
+    # while greedy one-hot proposals only get accept prob p(argmax).
+    common = dict(drafter="model", draft_params=params, draft_cfg=cfg)
+    greedy = _serve(params, cfg, [p.copy() for p in prompts],
+                    spec=SpecConfig(k=k, **common),
+                    slots=b, max_new=max_new, temperature=temp)
+    _emit_spec_row(f"spec/greedy_draft_t{temp}/K{k}b{b}", greedy, k=k,
+                   batch=b, arm="greedy_draft")
+    stoch = _serve(params, cfg, [p.copy() for p in prompts],
+                   spec=SpecConfig(k=k, stochastic=True, **common),
+                   slots=b, max_new=max_new, temperature=temp)
+    _emit_spec_row(f"spec/stochastic_draft_t{temp}/K{k}b{b}", stoch, k=k,
+                   batch=b, arm="stochastic_draft")
+
+
 def run(quick: bool = True):
     _bench_verify_gemm(quick)
     _bench_engine(quick)
+    _bench_adaptive(quick)
+    _bench_stochastic(quick)
     write_results("spec")
 
 

@@ -1,17 +1,28 @@
 """Speculative serving quickstart: the decode path as a Vec-LUT parallel
 workload. Train-free — packs random ternary weights, then serves the same
-request stream three ways and prints the accept/throughput accounting:
+request stream several ways and prints the accept/throughput accounting:
 
-  plain    one token per slot per tick (the M=1 decode the paper critiques)
-  ngram    prompt-lookup drafting (no extra weights) + (B, K+1) verification
-  oracle   self-drafting with the target's own weights — acceptance is 1.0
-           by construction, showing the verification-side ceiling (K+1
-           tokens per step)
+  plain     one token per slot per tick (the M=1 decode the paper critiques)
+  ngram     prompt-lookup drafting (no extra weights) + (B, K+1) verification
+  adaptive  the same drafter with per-slot adaptive draft lengths: each
+            slot's k_eff tracks its acceptance EWMA, and cold slots (here:
+            the random half of the workload, which prompt-lookup can't
+            draft for) skip drafting entirely — watch the mean_k / skip
+            columns split the warm and cold halves
+  oracle    self-drafting with the target's own weights — acceptance is 1.0
+            by construction, showing the verification-side ceiling (K+1
+            tokens per step)
 
     PYTHONPATH=src python examples/serve_speculative.py [--arch smollm-360m] [--k 4]
 
 Greedy speculative output is token-for-token identical to plain decoding —
-the script asserts it.
+adaptive K included — and the script asserts it.
+
+With --temperature T (T>0) the script instead demos stochastic drafting:
+a ModelDrafter samples its proposals at the serving temperature and
+rejection sampling consumes the proposal distributions (draft_probs), so
+emitted tokens are exact target-model samples; the printed acceptance gap
+vs greedy drafting is the probability mass greedy proposals throw away.
 """
 import argparse
 
@@ -24,14 +35,21 @@ from repro.serve import ContinuousBatchingScheduler, Engine, Request
 from repro.spec import SpecConfig
 
 
-def serve(params, cfg, prompts, args, spec=None):
-    eng = Engine(params, cfg, max_slots=args.slots, max_len=256, spec=spec)
+def serve(params, cfg, prompts, args, spec=None, temperature=0.0):
+    eng = Engine(params, cfg, max_slots=args.slots, max_len=256, spec=spec,
+                 temperature=temperature)
     sched = ContinuousBatchingScheduler(eng)
     reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=args.max_new)
             for i, p in enumerate(prompts)]
     sched.submit(reqs)
     stats = sched.run_to_completion()
     return [r.generated for r in reqs], stats
+
+
+def fmt(stats):
+    return (f"{stats.decode_tok_s:7.1f} decode tok/s   "
+            f"{stats.decode_tokens_per_step:.2f} tok/step   "
+            f"accept {stats.acceptance_rate:.2f}")
 
 
 def main():
@@ -41,30 +59,57 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--k", type=int, default=4, help="draft tokens per step")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help=">0 switches to the stochastic-drafting demo")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
     rng = np.random.default_rng(0)
-    # repetitive prompts — the regime prompt-lookup drafting feeds on
+    # half repetitive prompts (the regime prompt-lookup drafting feeds on),
+    # half random (adversarial for drafting — the adaptive policy's prey)
     pat = rng.integers(0, cfg.vocab, size=4)
-    prompts = [np.tile(pat, 6).astype(np.int32) for _ in range(args.requests)]
+    warm = [np.tile(pat, 6).astype(np.int32) for _ in range(args.requests // 2)]
+    cold = [rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+            for _ in range(args.requests - args.requests // 2)]
+    prompts = warm + cold
+
+    if args.temperature > 0:
+        # stochastic-drafting demo: self-draft so the arm isolates the
+        # proposal mode (q == p under stochastic → acceptance 1.0 ceiling)
+        common = dict(k=args.k, drafter="model",
+                      draft_params=params, draft_cfg=cfg)
+        _, st = serve(params, cfg, prompts, args,
+                      spec=SpecConfig(**common), temperature=args.temperature)
+        print(f"greedy-draft     @T={args.temperature}: {fmt(st)}")
+        _, st = serve(params, cfg, prompts, args,
+                      spec=SpecConfig(stochastic=True, **common),
+                      temperature=args.temperature)
+        print(f"stochastic-draft @T={args.temperature}: {fmt(st)}")
+        print("both emit exact target-model samples; the acceptance gap is "
+              "the draft mass greedy (one-hot) proposals discard")
+        return
 
     plain, base = serve(params, cfg, prompts, args)
-    print(f"plain : {base.decode_tok_s:7.1f} decode tok/s   1.00 tok/step")
+    print(f"plain   : {base.decode_tok_s:7.1f} decode tok/s   1.00 tok/step")
 
     ngram, st = serve(params, cfg, prompts, args, spec=SpecConfig(k=args.k))
-    print(f"ngram : {st.decode_tok_s:7.1f} decode tok/s   "
-          f"{st.decode_tokens_per_step:.2f} tok/step   "
-          f"accept {st.acceptance_rate:.2f}")
+    print(f"ngram   : {fmt(st)}")
     assert ngram == plain, "greedy speculative decode must be exact"
+
+    adaptive, st = serve(
+        params, cfg, prompts, args,
+        spec=SpecConfig(k=args.k, adaptive_k=True, skip_below=0.25,
+                        probe_every=4),
+    )
+    print(f"adaptive: {fmt(st)}   mean_k {st.mean_draft_k:.2f}   "
+          f"skip {st.skip_rate:.2f}")
+    assert adaptive == plain, "adaptive-K greedy decode must stay exact"
 
     oracle_spec = SpecConfig(k=args.k, drafter="model",
                              draft_params=params, draft_cfg=cfg)
     oracle, st = serve(params, cfg, prompts, args, spec=oracle_spec)
-    print(f"oracle: {st.decode_tok_s:7.1f} decode tok/s   "
-          f"{st.decode_tokens_per_step:.2f} tok/step   "
-          f"accept {st.acceptance_rate:.2f}")
+    print(f"oracle  : {fmt(st)}")
     assert oracle == plain
     print("exactness: speculative output == plain greedy output ✓")
 

@@ -5,6 +5,8 @@
 
 Add --spec-k N for speculative decoding (n-gram drafter, N draft tokens per
 batched verify step); the summary line then reports acceptance and tok/step.
+--spec-adaptive adapts each slot's draft length to its acceptance EWMA
+(cold slots skip drafting entirely), adding mean_k and skip-rate columns.
 """
 import argparse
 
@@ -31,7 +33,12 @@ def main():
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding draft length (0 = off; "
                          "n-gram prompt-lookup drafter)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="per-slot adaptive draft length from the running "
+                         "acceptance rate (cold slots skip drafting)")
     args = ap.parse_args()
+    if args.spec_adaptive and not args.spec_k:
+        ap.error("--spec-adaptive requires --spec-k N (N >= 1)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     init = encdec_init if cfg.family == "encdec" else init_lm
@@ -43,7 +50,7 @@ def main():
     if args.spec_k:
         from repro.spec import SpecConfig
 
-        spec = SpecConfig(k=args.spec_k)
+        spec = SpecConfig(k=args.spec_k, adaptive_k=args.spec_adaptive)
     engine = Engine(
         params, cfg, max_slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, spec=spec,
@@ -67,6 +74,10 @@ def main():
         f"tok/step={stats.decode_tokens_per_step:.2f}"
         if stats.spec_steps else ""
     )
+    if stats.spec_steps and args.spec_adaptive:
+        spec_cols += (
+            f" mean_k={stats.mean_draft_k:.2f} skip={stats.skip_rate:.2f}"
+        )
     rej_cols = f" rejected={stats.rejected}" if stats.rejected else ""
     ttft_ms = 1e3 * float(np.median(stats.ttft_s)) if stats.ttft_s else 0.0
     print(

@@ -14,6 +14,17 @@ over (B, K+1) candidates — the Vec-LUT mpGeMM kernels see M=K+1 parallel
 tokens instead of M=1 — and `sampling.accept_speculative` keeps the longest
 valid prefix, rolling the KV cache back past the first rejection. Greedy
 outputs are token-for-token identical to plain decoding.
+
+With `SpecConfig(adaptive_k=True)` the engine additionally tracks a per-slot
+acceptance-rate EWMA and drafts only `k_eff = spec.k_policy(ewma)` real
+tokens per slot each step (0 for cold slots — their verify row degenerates to
+a plain last-token decode), padding the rest so the one compiled (B, K+1)
+verify step serves every mixture of slot speeds; `accept_speculative` is
+handed the matching `draft_mask` and never accepts past a slot's k_eff.
+`SpecConfig(stochastic=True)` makes a ModelDrafter sample its proposals at
+the serving temperature and threads the per-position draft distributions
+into acceptance (`draft_probs`), so temperature>0 serving emits exact
+target-model samples with real draft probability mass credited.
 """
 from __future__ import annotations
 
@@ -47,6 +58,19 @@ def spec_tokens_per_step(decode_tokens: int, spec_slot_steps: int) -> float:
     return decode_tokens / spec_slot_steps if spec_slot_steps else 1.0
 
 
+def spec_skip_rate(spec_skipped_steps: int, spec_slot_steps: int) -> float:
+    """Fraction of slot verify steps that skipped drafting (k_eff=0)."""
+    return spec_skipped_steps / spec_slot_steps if spec_slot_steps else 0.0
+
+
+def spec_mean_k(
+    drafted_tokens: int, spec_slot_steps: int, spec_skipped_steps: int
+) -> float:
+    """Mean effective draft length over the slot steps that did draft."""
+    drafting = spec_slot_steps - spec_skipped_steps
+    return drafted_tokens / drafting if drafting else 0.0
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -63,6 +87,19 @@ class Request:
 
 
 class Engine:
+    """Slot-based continuous-batching engine over a static (max_slots,
+    max_len) KV cache.
+
+    `spec=SpecConfig(...)` turns decode into draft→verify→accept;
+    `SpecConfig(adaptive_k=True)` additionally adapts each slot's draft
+    length to its acceptance EWMA (see `_choose_k_eff` / `SpecConfig.
+    k_policy`; live per-slot state in `slot_accept` / `slot_k_eff`), and
+    `SpecConfig(stochastic=True)` samples ModelDrafter proposals at the
+    serving `temperature`, threading their distributions into rejection
+    sampling. Admission budgets `len(prompt) + max_new_tokens - 1` cache
+    positions (+ the k-token draft window under speculation): the final
+    generated token is sampled but never written back."""
+
     def __init__(
         self,
         params,
@@ -126,11 +163,18 @@ class Engine:
                 lambda p, c, t: model_verify(p, t, c, cfg, mode=mode),
                 donate_argnums=(1,),
             )
+        # per-slot adaptive-K state: acceptance EWMA (slots start optimistic
+        # at 1.0 on admission), the consecutive-skip streak that triggers a
+        # cold slot's k_min probe, and the last k_eff the policy chose
+        self.slot_accept = np.ones(max_slots, np.float64)
+        self.slot_skip_streak = np.zeros(max_slots, np.int64)
+        self.slot_k_eff = np.full(max_slots, self._draft_k, np.int64)
         # stats
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self.spec_steps = 0         # batched verify steps (engine ticks)
         self.spec_slot_steps = 0    # per-slot verify steps (Σ active slots)
+        self.spec_skipped_steps = 0  # slot steps that skipped drafting (k_eff=0)
         self.drafted_tokens = 0
         self.accepted_tokens = 0
 
@@ -142,13 +186,16 @@ class Engine:
     def _validate(self, req: Request) -> None:
         """Reject requests that would overflow the slot KV cache: the prompt
         plus every decode position (and, speculatively, up to `k` draft
-        positions past the last kept token) must fit in max_len."""
-        need = len(req.prompt) + req.max_new_tokens + self._draft_k
+        positions past the last kept token) must fit in max_len. The final
+        generated token is sampled but never written back, so it needs no
+        cache position: prompt + max_new_tokens - 1 (+ draft window) is the
+        exact budget."""
+        need = len(req.prompt) + req.max_new_tokens - 1 + self._draft_k
         if need > self.max_len:
             extra = f" + draft window ({self._draft_k})" if self._draft_k else ""
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + "
-                f"max_new_tokens ({req.max_new_tokens}){extra} = {need} "
+                f"max_new_tokens - 1 ({req.max_new_tokens - 1}){extra} = {need} "
                 f"exceeds max_len={self.max_len}; truncate the prompt, lower "
                 f"max_new_tokens, or grow the engine's max_len"
             )
@@ -186,6 +233,10 @@ class Engine:
         self.active[slot] = True
         if self.drafter is not None:
             self.drafter.on_admit(slot, req.prompt)
+        # fresh request → optimistic acceptance state (starts at full k)
+        self.slot_accept[slot] = 1.0
+        self.slot_skip_streak[slot] = 0
+        self.slot_k_eff[slot] = self._draft_k
         return True
 
     def _sample(self, logits):
@@ -195,9 +246,12 @@ class Engine:
     def _slot_exhausted(self, req: Request) -> bool:
         """True when the slot has no room for another decode (or verify)
         step: the next write position (+ draft window) would pass max_len.
-        Admission bounds this, but max_new_tokens is re-checked so a slot can
-        never scribble past its buffer."""
-        next_pos = len(req.prompt) + len(req.generated)  # last_token's slot
+        Admission bounds this (so this never fires for admitted requests —
+        it is a safety re-check against buffer scribbles), but it must use
+        the same exact bound: the last generated token is never written, so
+        the next step writes positions next_pos .. next_pos + draft_k where
+        next_pos is the cache slot last_token will occupy."""
+        next_pos = len(req.prompt) + len(req.generated) - 1  # last_token's slot
         return next_pos + self._draft_k >= self.max_len
 
     def _finish_slot(self, slot: int, req: Request, now: float):
@@ -229,10 +283,43 @@ class Engine:
             if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
                 self._finish_slot(slot, req, now)
 
+    def _choose_k_eff(self) -> np.ndarray:
+        """Per-slot effective draft length for this step: spec.k everywhere
+        unless adaptive_k, in which case each active slot gets
+        spec.k_policy(acceptance EWMA, skip streak) ∈ [0, k]."""
+        k_eff = np.full(self.max_slots, self.spec.k, np.int64)
+        if not self.spec.adaptive_k:
+            return k_eff
+        for slot in range(self.max_slots):
+            if self.active[slot]:
+                k_eff[slot] = self.spec.k_policy(
+                    float(self.slot_accept[slot]),
+                    int(self.slot_skip_streak[slot]),
+                )
+        return k_eff
+
+    def _update_slot_accept(self, slot: int, k_eff: int, n_acc: int) -> None:
+        """Fold one verify step's verdict into the slot's acceptance EWMA;
+        skipped (k_eff=0) steps only advance the probe streak."""
+        if k_eff == 0:
+            self.slot_skip_streak[slot] += 1
+            self.spec_skipped_steps += 1
+            return
+        self.slot_skip_streak[slot] = 0
+        a = self.spec.accept_ewma
+        self.slot_accept[slot] = a * self.slot_accept[slot] + (1 - a) * (
+            n_acc / k_eff
+        )
+
     def _decode_spec(self):
         """One speculative decode step: drafter proposal, a single batched
         (B, K+1) verify pass through the Vec-LUT kernels, longest-accepted-
-        prefix emission, and KV rollback to the last kept position."""
+        prefix emission, and KV rollback to the last kept position.
+
+        Shapes are static for every mixture of per-slot draft lengths: a slot
+        drafting k_eff < k real tokens pads the rest of its row, and the
+        draft_mask handed to accept_speculative stops acceptance at k_eff
+        (a k_eff=0 row is a plain last-token decode)."""
         k = self.spec.k
         contexts: list = [None] * self.max_slots
         pos = np.zeros(self.max_slots, np.int64)     # per-slot cache idx
@@ -242,13 +329,29 @@ class Engine:
                     [np.asarray(req.prompt, np.int64), np.asarray(req.generated, np.int64)]
                 )
                 pos[slot] = len(req.prompt) + len(req.generated) - 1
-        draft = np.asarray(self.drafter.propose(contexts, k), np.int32)
+        k_eff = self._choose_k_eff()
+        self.slot_k_eff = k_eff.copy()
+        stochastic = self.spec.stochastic and self.temperature > 0.0
+        draft_probs = None
+        if stochastic:
+            self.rng, draft_key = jax.random.split(self.rng)
+            draft, probs = self.drafter.propose(
+                contexts, k, slot_k=k_eff, rng=draft_key,
+                temperature=self.temperature, return_probs=True,
+            )
+            if probs is not None:
+                draft_probs = jnp.asarray(probs)
+        else:
+            draft = self.drafter.propose(contexts, k, slot_k=k_eff)
+        draft = np.asarray(draft, np.int32)
+        mask = np.arange(k)[None, :] < k_eff[:, None]            # (B, K)
         tokens = jnp.concatenate([self.last_token, jnp.asarray(draft)], axis=1)
         with kernel_ops.dispatch_override(**self._mpgemm):
             logits, cache = self._verify(self.params, self.cache, tokens)
         self.rng, key = jax.random.split(self.rng)
         n_acc, out = accept_speculative(
-            jnp.asarray(draft), logits, key, temperature=self.temperature
+            jnp.asarray(draft), logits, key, temperature=self.temperature,
+            draft_probs=draft_probs, draft_mask=jnp.asarray(mask),
         )
         n_acc, out = np.asarray(n_acc), np.asarray(out)
         # free slots get an arbitrary idx (pos stays 0 for them): harmless —
@@ -267,10 +370,11 @@ class Engine:
             new_idx[slot] = pos[slot] + take
             self.decode_tokens += take
             self.spec_slot_steps += 1
-            self.drafted_tokens += k
+            self.drafted_tokens += int(k_eff[slot])
             # acceptance counts the verifier's verdict, not the emission cap:
             # a request finishing mid-step still accepted n_acc draft tokens.
             self.accepted_tokens += int(n_acc[slot])
+            self._update_slot_accept(slot, int(k_eff[slot]), int(n_acc[slot]))
             if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
                 self._finish_slot(slot, req, now)
         self.spec_steps += 1
@@ -281,7 +385,7 @@ class Engine:
         """Zero the token/acceptance counters (e.g. after a warmup run, so a
         timed run's stats exclude it). Slot/cache state is untouched."""
         self.prefill_tokens = self.decode_tokens = 0
-        self.spec_steps = self.spec_slot_steps = 0
+        self.spec_steps = self.spec_slot_steps = self.spec_skipped_steps = 0
         self.drafted_tokens = self.accepted_tokens = 0
 
     @property
@@ -295,3 +399,13 @@ class Engine:
     @property
     def decode_tokens_per_step(self) -> float:
         return spec_tokens_per_step(self.decode_tokens, self.spec_slot_steps)
+
+    @property
+    def skip_rate(self) -> float:
+        return spec_skip_rate(self.spec_skipped_steps, self.spec_slot_steps)
+
+    @property
+    def mean_draft_k(self) -> float:
+        return spec_mean_k(
+            self.drafted_tokens, self.spec_slot_steps, self.spec_skipped_steps
+        )

@@ -1,6 +1,15 @@
 """Token sampling: greedy / temperature / top-k, plus the speculative-decoding
 acceptance rules (exact greedy matching and Leviathan-style rejection
-sampling over a verify step's (B, K+1, V) logits)."""
+sampling over a verify step's (B, K+1, V) logits).
+
+Both acceptance rules take an optional ``draft_mask`` so a batch can mix
+per-slot effective draft lengths: position j of row b is a *real* proposal
+only where ``draft_mask[b, j]`` — acceptance can never run past the first
+masked (padded) position, and the correction token emitted there is a full
+target sample rather than a residual resample (nothing was proposed, so
+nothing was rejected). One compiled (B, K+1) verify thereby serves every
+mixture of per-slot draft lengths, including k_eff=0 plain-decode rows.
+"""
 from __future__ import annotations
 
 import jax
@@ -18,6 +27,8 @@ def sample(
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
+    # top_k >= V keeps every token (and must not index out of bounds)
+    top_k = min(top_k, logits.shape[-1])
     if top_k:
         kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
         logits = jnp.where(logits < kth, -1e30, logits)
@@ -27,15 +38,23 @@ def sample(
 # --------------------------------------------------------------------------
 # Speculative acceptance
 # --------------------------------------------------------------------------
-def greedy_accept(draft: jax.Array, target_tokens: jax.Array) -> jax.Array:
+def greedy_accept(
+    draft: jax.Array,
+    target_tokens: jax.Array,
+    draft_mask: jax.Array | None = None,
+) -> jax.Array:
     """Longest accepted draft prefix under exact greedy matching.
 
     draft: (B, K) proposed tokens; target_tokens: (B, K+1) the target's
     greedy picks at each verified position. Draft token j is accepted iff it
-    equals the target's pick after the j-1 previously accepted tokens.
+    equals the target's pick after the j-1 previously accepted tokens —
+    and, when draft_mask (B, K) bool is given, iff position j holds a real
+    proposal (padding past a slot's k_eff is never accepted).
     → (B,) int32 in [0, K]."""
-    matches = (draft == target_tokens[:, :-1]).astype(jnp.int32)
-    return jnp.sum(jnp.cumprod(matches, axis=1), axis=1)
+    matches = draft == target_tokens[:, :-1]
+    if draft_mask is not None:
+        matches = matches & draft_mask
+    return jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1), axis=1)
 
 
 def accept_speculative(
@@ -45,6 +64,7 @@ def accept_speculative(
     *,
     temperature: float = 0.0,
     draft_probs: jax.Array | None = None,
+    draft_mask: jax.Array | None = None,
 ):
     """Acceptance rule over one verify step. → (n_accepted (B,), out (B, K+1)).
 
@@ -54,6 +74,13 @@ def accept_speculative(
     draft prefix followed by one bonus/correction token — every speculative
     step advances at least one token.
 
+    draft_mask: (B, K) bool, True where the draft position is a real
+    proposal. Rows with fewer than K real drafts (per-slot adaptive k_eff,
+    down to 0 = an unspeculated plain-decode row) pad the tail; acceptance
+    stops at the first padded position and the token emitted there is a
+    *full* target sample/argmax for that position — exact, because position
+    k_eff's logits condition only on the k_eff accepted real drafts.
+
     temperature<=0: exact greedy matching — emitted tokens are token-for-token
     what sequential greedy decode would produce.
 
@@ -62,13 +89,19 @@ def accept_speculative(
     normalized residual (p-q)+, after full acceptance sample the bonus from
     the last position. q defaults to the one-hot proposal of a deterministic
     (greedy/n-gram) drafter, in which case acceptance prob is p(x) and the
-    residual is p with x removed; pass draft_probs (B, K, V) for a stochastic
-    drafter. Either way emitted tokens are exact target-model samples."""
+    residual is p with x removed; pass draft_probs (B, K, V) — e.g. a
+    stochastic ModelDrafter's per-position sampling distributions — for a
+    stochastic drafter. Either way emitted tokens are exact target-model
+    samples. When the residual vanishes (p ≤ q everywhere, possible only
+    through float round-off or an inconsistent q) the fallback resamples
+    from p with the rejected token explicitly zeroed, so a rejected token
+    can never be re-emitted at its own position."""
     b, kp1, v = target_logits.shape
     k = kp1 - 1
+    mask = None if draft_mask is None else jnp.asarray(draft_mask, bool)
     if temperature <= 0.0:
         tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)   # (B, K+1)
-        return greedy_accept(draft, tgt), tgt
+        return greedy_accept(draft, tgt, mask), tgt
 
     p = jax.nn.softmax(target_logits / temperature, axis=-1)         # (B,K+1,V)
     p_k = p[:, :k]
@@ -79,16 +112,34 @@ def accept_speculative(
     else:
         q = draft_probs
         q_draft = jnp.take_along_axis(q, draft[..., None], axis=-1)[..., 0]
-    rng_u, rng_r, rng_b = jax.random.split(rng, 3)
+    rng_u, rng_r, rng_f, rng_b = jax.random.split(rng, 4)
     u = jax.random.uniform(rng_u, (b, k))
-    accept = (u < p_draft / jnp.maximum(q_draft, 1e-20)).astype(jnp.int32)
-    n_acc = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)             # (B,)
+    accept = u < p_draft / jnp.maximum(q_draft, 1e-20)
+    if mask is not None:
+        accept = accept & mask
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+    # Rejection can only fire where p(x) <= q(x), so the residual (p-q)+ is
+    # already zero at the rejected token; the vanishing-residual fallback must
+    # preserve that — resample from p with the rejected token removed, never
+    # from full p (which could re-emit the token just rejected).
+    not_drafted = 1.0 - jax.nn.one_hot(draft, v, dtype=p.dtype)
     residual = jnp.maximum(p_k - q, 0.0)
     rsum = jnp.sum(residual, axis=-1, keepdims=True)
-    residual = jnp.where(rsum > 0, residual / jnp.maximum(rsum, 1e-30), p_k)
+    fallback = p_k * not_drafted
+    fallback = fallback / jnp.maximum(
+        jnp.sum(fallback, axis=-1, keepdims=True), 1e-30
+    )
+    residual = jnp.where(rsum > 0, residual / jnp.maximum(rsum, 1e-30), fallback)
     resample = jax.random.categorical(
         rng_r, jnp.log(jnp.maximum(residual, 1e-30)), axis=-1
     )                                                                 # (B, K)
+    if mask is not None:
+        # padded positions proposed nothing → correction is a full target
+        # sample for that position, not a residual resample
+        full = jax.random.categorical(
+            rng_f, target_logits[:, :k] / temperature, axis=-1
+        )
+        resample = jnp.where(mask, resample, full)
     bonus = jax.random.categorical(rng_b, target_logits[:, -1] / temperature, axis=-1)
     j = jnp.arange(k, dtype=n_acc.dtype)[None, :]
     mid = jnp.where(j < n_acc[:, None], draft, resample).astype(jnp.int32)

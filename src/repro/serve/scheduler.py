@@ -12,7 +12,14 @@ import time
 from collections import deque
 from typing import Iterable
 
-from .engine import Engine, Request, spec_acceptance_rate, spec_tokens_per_step
+from .engine import (
+    Engine,
+    Request,
+    spec_acceptance_rate,
+    spec_mean_k,
+    spec_skip_rate,
+    spec_tokens_per_step,
+)
 
 
 @dataclasses.dataclass
@@ -26,6 +33,7 @@ class ServeStats:
     # speculative decoding (zero when the engine runs without spec=)
     spec_steps: int = 0         # batched verify steps
     spec_slot_steps: int = 0    # per-slot verify steps (Σ active slots)
+    spec_skipped_steps: int = 0  # slot steps that skipped drafting (k_eff=0)
     drafted_tokens: int = 0
     accepted_tokens: int = 0
 
@@ -40,6 +48,18 @@ class ServeStats:
     @property
     def decode_tokens_per_step(self) -> float:
         return spec_tokens_per_step(self.decode_tokens, self.spec_slot_steps)
+
+    @property
+    def skip_rate(self) -> float:
+        """Fraction of slot verify steps the adaptive policy left undrafted."""
+        return spec_skip_rate(self.spec_skipped_steps, self.spec_slot_steps)
+
+    @property
+    def mean_draft_k(self) -> float:
+        """Mean k_eff over the slot steps that did draft (k when fixed)."""
+        return spec_mean_k(
+            self.drafted_tokens, self.spec_slot_steps, self.spec_skipped_steps
+        )
 
     @property
     def throughput_tok_s(self) -> float:
@@ -71,18 +91,23 @@ class ContinuousBatchingScheduler:
 
         A request the engine can never fit (prompt + budget > max_len) is
         rejected in place — `error` set, `done` stays False, no output; see
-        `self.rejected` — so one bad request aborts itself, not the batch."""
-        if self.queue:
+        `self.rejected` — so one bad request aborts itself, not the batch.
+        A rejection does not consume the tick's admission: the scheduler
+        keeps trying subsequent queued requests until one admits, the engine
+        reports no free slot, or the queue drains."""
+        while self.queue:
             head = self.queue[0]
             try:
-                if self.engine.add(head):
-                    self.queue.popleft()
-                    if head.done:      # satisfied by prefill alone
-                        self.completed.append(head)
+                if not self.engine.add(head):
+                    break              # no free slot — head stays queued
+                self.queue.popleft()
+                if head.done:          # satisfied by prefill alone
+                    self.completed.append(head)
+                break                  # one successful admission per tick
             except ValueError as e:
                 head.error = str(e)
                 self.rejected.append(head)
-                self.queue.popleft()
+                self.queue.popleft()   # rejected in place; try the next
         before = dict(self.engine.slot_req)
         self.engine.decode_once()
         for slot in before.keys() - self.engine.slot_req.keys():
@@ -114,6 +139,7 @@ class ContinuousBatchingScheduler:
             ],
             spec_steps=self.engine.spec_steps,
             spec_slot_steps=self.engine.spec_slot_steps,
+            spec_skipped_steps=self.engine.spec_skipped_steps,
             drafted_tokens=self.engine.drafted_tokens,
             accepted_tokens=self.engine.accepted_tokens,
         )

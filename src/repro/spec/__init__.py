@@ -14,6 +14,16 @@ Components
   * SpecConfig     — knobs: draft length `k`, drafter choice, n-gram window,
                      draft-model params/config. `Engine(spec=SpecConfig(...))`
                      switches `decode_once` to the speculative step.
+                     `adaptive_k=True` adds per-slot adaptive draft lengths:
+                     the engine tracks a per-slot acceptance EWMA
+                     (`accept_ewma` decay) and drafts k_eff = `k_policy(ewma)`
+                     ∈ {0} ∪ [k_min, k] real tokens per slot — cold slots
+                     (`skip_below`) skip drafting entirely and re-probe every
+                     `probe_every` steps — padding rows so the one compiled
+                     (B, k+1) verify serves every mixture. `stochastic=True`
+                     (drafter='model') samples proposals at the serving
+                     temperature and threads the draft distributions into
+                     rejection sampling (`draft_probs`).
   * NgramDrafter   — prompt-lookup / self-drafting: matches the context's
                      trailing n-gram against earlier context and proposes the
                      historical continuation. No extra weights.

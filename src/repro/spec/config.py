@@ -18,6 +18,34 @@ class SpecConfig:
                  (drafter='model' only). Passing the target's own params is
                  the always-accept oracle — useful for benchmarking the
                  verification ceiling.
+
+    Adaptive per-slot draft length (all shapes stay static — one compiled
+    (B, k+1) verify serves every mixture of slot speeds):
+
+    adaptive_k   track a per-slot acceptance-rate EWMA and draft only
+                 k_eff = k_policy(ewma) real tokens per slot, padding the
+                 row's tail with masked drafts that acceptance never runs
+                 past. Cold slots (ewma < skip_below) skip drafting entirely
+                 (k_eff=0: a plain last-token decode row), recovering plain-
+                 decode cost on adversarial contexts.
+    accept_ewma  EWMA decay: after each verify step a drafting slot updates
+                 ewma ← accept_ewma·ewma + (1-accept_ewma)·(n_acc/k_eff).
+                 Slots start optimistic (ewma=1.0) on admission.
+    k_min        floor on k_eff for slots that do draft (and the probe
+                 length for cold slots).
+    skip_below   acceptance EWMA below which a slot stops drafting.
+    probe_every  a cold slot re-probes with k_min drafts after this many
+                 consecutive skipped steps, so it can warm back up.
+
+    Stochastic drafting (drafter='model' only):
+
+    stochastic   with temperature>0 serving, the ModelDrafter samples its
+                 proposals at the serving temperature and returns the
+                 per-position draft distributions; the engine feeds them to
+                 `accept_speculative(draft_probs=...)` so emitted tokens are
+                 exact target-model samples with the draft model's full
+                 (not just argmax) probability mass counted toward
+                 acceptance. With temperature<=0 drafting stays greedy.
     """
     k: int = 4
     drafter: str = "ngram"
@@ -25,6 +53,14 @@ class SpecConfig:
     ngram_min: int = 1
     draft_params: Any = None
     draft_cfg: Any = None
+    # adaptive per-slot draft length
+    adaptive_k: bool = False
+    accept_ewma: float = 0.75
+    k_min: int = 1
+    skip_below: float = 0.125
+    probe_every: int = 8
+    # stochastic (sampled) ModelDrafter proposals
+    stochastic: bool = False
 
     def __post_init__(self):
         if self.k < 1:
@@ -37,6 +73,40 @@ class SpecConfig:
             self.draft_params is None or self.draft_cfg is None
         ):
             raise ValueError("drafter='model' needs draft_params and draft_cfg")
+        if not 0.0 <= self.accept_ewma < 1.0:
+            raise ValueError(
+                f"SpecConfig.accept_ewma must be in [0, 1), got {self.accept_ewma}"
+            )
+        if not 1 <= self.k_min <= self.k:
+            raise ValueError(
+                f"SpecConfig.k_min must be in [1, k={self.k}], got {self.k_min}"
+            )
+        if not 0.0 <= self.skip_below <= 1.0:
+            raise ValueError(
+                f"SpecConfig.skip_below must be in [0, 1], got {self.skip_below}"
+            )
+        if self.probe_every < 1:
+            raise ValueError(
+                f"SpecConfig.probe_every must be >= 1, got {self.probe_every}"
+            )
+        if self.stochastic and self.drafter != "model":
+            raise ValueError(
+                "SpecConfig.stochastic needs drafter='model'; deterministic "
+                "drafters are already exact as one-hot proposals"
+            )
+
+    def k_policy(self, ewma: float, skip_streak: int = 0) -> int:
+        """Effective draft length for a slot whose acceptance EWMA is `ewma`.
+
+        Warm slots draft proportionally to their acceptance (clamped to
+        [k_min, k]); cold slots (ewma < skip_below) draft nothing — their
+        verify row is a plain last-token decode — except for a k_min probe
+        after `probe_every` consecutive skips so acceptance can recover."""
+        if not self.adaptive_k:
+            return self.k
+        if ewma < self.skip_below:
+            return self.k_min if skip_streak >= self.probe_every else 0
+        return min(self.k, max(self.k_min, int(round(ewma * self.k))))
 
     def build(self, *, max_slots: int, max_len: int, mode: str = "serve"):
         """Instantiate the configured drafter for an engine's slot layout."""

@@ -20,10 +20,34 @@ class Drafter:
     def on_release(self, slot: int) -> None:
         """The request in `slot` finished; the slot will be reused."""
 
-    def propose(self, contexts: list, k: int) -> np.ndarray:
+    def propose(
+        self,
+        contexts: list,
+        k: int,
+        *,
+        slot_k: np.ndarray | None = None,
+        rng=None,
+        temperature: float = 0.0,
+        return_probs: bool = False,
+    ):
         """contexts: one entry per slot — the full token context (prompt +
         generated) as a 1-D int array for active slots, None for free slots.
-        → (max_slots, k) int32 draft tokens (free-slot rows are ignored)."""
+        → (max_slots, k) int32 draft tokens (free-slot rows are ignored).
+
+        slot_k: per-slot effective draft length in [0, k] (adaptive-K
+        engines). Columns >= slot_k[i] are padding the engine masks out of
+        acceptance — a drafter may fill them with anything valid and may
+        skip per-slot work for slot_k[i]==0 rows, but must keep the dense
+        (max_slots, k) shape.
+
+        rng / temperature: stochastic drafters sample proposals at
+        `temperature` using the JAX PRNG key `rng` (greedy when
+        temperature<=0 or rng is None).
+
+        return_probs: also return the per-position proposal distributions —
+        `(draft, probs)` with probs (max_slots, k, V) float, or
+        `(draft, None)` from a deterministic drafter (the engine then treats
+        the proposal as one-hot)."""
         raise NotImplementedError
 
 
@@ -55,10 +79,21 @@ class NgramDrafter(Drafter):
                 return out
         return np.full(k, ctx[-1], ctx.dtype)
 
-    def propose(self, contexts: list, k: int) -> np.ndarray:
+    def propose(
+        self,
+        contexts: list,
+        k: int,
+        *,
+        slot_k: np.ndarray | None = None,
+        rng=None,
+        temperature: float = 0.0,
+        return_probs: bool = False,
+    ):
         out = np.zeros((len(contexts), k), np.int32)
         for i, ctx in enumerate(contexts):
-            if ctx is None:
-                continue
+            if ctx is None or (slot_k is not None and slot_k[i] == 0):
+                continue                    # free or skip-drafting slot
             out[i] = self._propose_one(np.asarray(ctx, np.int64), k)
+        if return_probs:
+            return out, None                # deterministic → one-hot proposal
         return out

@@ -8,15 +8,21 @@ shaped like the engine's (max_slots, max_len). Each `propose` call:
      `verify_step` (per-slot positions, padded to k+1 so the step is
      compile-once), giving the first draft token from the final real
      position's logits;
-  2. *draft* — k-1 greedy single-token decode steps extend the proposal;
+  2. *draft* — k-1 single-token decode steps extend the proposal;
   3. *rollback* — the cache idx is restored to the accepted-token count
      (`models.rollback_cache`), so speculated draft state never contaminates
      the next resync. The same stale-entry safety argument as the target's
      rollback applies (position-masked attention + scatter-before-attend).
 
-Greedy drafting makes the proposal deterministic, so rejection sampling
-treats it as a one-hot proposal distribution (see sampling.accept_speculative).
-Passing the target's own params/config yields the always-accept oracle.
+Drafting is greedy by default, making the proposal deterministic so rejection
+sampling treats it as a one-hot proposal distribution. With `temperature > 0`
+and a PRNG key the proposal is instead *sampled* at that temperature, and
+`propose(..., return_probs=True)` returns the per-position sampling
+distributions q (max_slots, k, V) — `sampling.accept_speculative` consumes
+them as `draft_probs`, so temperature>0 serving still emits exact target-model
+samples while crediting the draft model's full probability mass toward
+acceptance (see sampling.accept_speculative; SpecConfig.stochastic wires this
+up). Passing the target's own params/config yields the always-accept oracle.
 """
 from __future__ import annotations
 
@@ -74,7 +80,35 @@ class ModelDrafter(Drafter):
         self.synced[slot] = len(prompt)
 
     # ------------------------------------------------------------------
-    def propose(self, contexts: list, k: int) -> np.ndarray:
+    def _pick(self, row_logits, key, temperature: float, want_q: bool):
+        """One draft position: (B, V) logits → (B,) host tokens (+ (B, V)
+        on-device proposal distribution when requested — kept as a jnp array
+        so the engine can hand it to acceptance without a host round-trip).
+        Greedy (one-hot q) unless temperature>0 and a key is given, in which
+        case tokens are sampled at that temperature and q is the matching
+        softmax."""
+        if temperature > 0.0 and key is not None:
+            scaled = row_logits / temperature
+            tok = jax.random.categorical(key, scaled, axis=-1)
+            q = jax.nn.softmax(scaled, axis=-1) if want_q else None
+        else:
+            tok = jnp.argmax(row_logits, axis=-1)
+            q = (
+                jax.nn.one_hot(tok, row_logits.shape[-1], dtype=jnp.float32)
+                if want_q else None
+            )
+        return np.asarray(tok, np.int32), q
+
+    def propose(
+        self,
+        contexts: list,
+        k: int,
+        *,
+        slot_k: np.ndarray | None = None,
+        rng=None,
+        temperature: float = 0.0,
+        return_probs: bool = False,
+    ):
         b = self.max_slots
         pad = k + 1                     # max tokens a verify step can emit
         tokens = np.zeros((b, pad), np.int32)
@@ -92,22 +126,33 @@ class ModelDrafter(Drafter):
             delta[i] = d
             tokens[i, :d] = ctx[self.synced[i]:]
             tokens[i, d:] = ctx[-1]     # pad; rolled back below
+        stochastic = temperature > 0.0 and rng is not None
+        keys = jax.random.split(rng, k) if stochastic else [None] * k
         # 1. resync: absorb the accepted tokens, one multi-token step
         logits, cache = self._verify(self.params, self.cache, jnp.asarray(tokens))
-        logits = np.asarray(logits)
         draft = np.zeros((b, k), np.int32)
-        draft[:, 0] = np.argmax(
-            logits[np.arange(b), delta - 1], axis=-1
-        )
+        qs: list = []                   # per-position (B, V) device arrays
+        row = jnp.take_along_axis(
+            logits, jnp.asarray(delta - 1)[:, None, None], axis=1
+        )[:, 0]                                                # (B, V)
+        draft[:, 0], q0 = self._pick(row, keys[0], temperature, return_probs)
+        qs.append(q0)
         # keep only the real (accepted) tokens in the cache
         cache = rollback_cache(cache, jnp.asarray(base + delta))
         self.synced = base + delta
-        # 2. draft: k-1 greedy decode steps (positions continue per slot)
+        # 2. draft: k-1 decode steps (positions continue per slot). slot_k
+        # rows needing fewer tokens still ride along — the step is batched
+        # and compile-once, and the engine masks their padded columns.
         last = jnp.asarray(draft[:, :1])
         for j in range(1, k):
             step_logits, cache = self._decode(self.params, cache, last)
-            draft[:, j] = np.argmax(np.asarray(step_logits), axis=-1)
+            draft[:, j], qj = self._pick(
+                step_logits, keys[j], temperature, return_probs
+            )
+            qs.append(qj)
             last = jnp.asarray(draft[:, j : j + 1])
         # 3. rollback: drop the speculated draft state
         self.cache = rollback_cache(cache, jnp.asarray(self.synced))
+        if return_probs:
+            return draft, jnp.stack(qs, axis=1)      # (B, K, V), on device
         return draft

@@ -99,6 +99,7 @@ class TestRingCache:
 
 
 class TestMLA:
+    @pytest.mark.slow  # full MLA smoke forward ×2 paths: compile-heavy
     def test_absorbed_decode_close_to_naive(self):
         cfg = get_config("deepseek-v3-671b", smoke=True)
         from repro.models import decode_step, init_cache, init_lm, lm_hidden, prefill

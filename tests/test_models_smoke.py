@@ -20,6 +20,20 @@ from repro.models import (
 
 ARCHS = list_archs()
 
+# the deepest/widest smoke configs dominate CPU compile time — the fast lane
+# (`pytest -m "not slow"`) keeps one arch per family instead
+_HEAVY_ARCHS = {
+    "jamba-1.5-large-398b", "gemma3-1b", "deepseek-v3-671b",
+    "llama4-scout-17b-a16e", "whisper-medium",
+}
+
+
+def _arch_params(archs):
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS else a
+        for a in archs
+    ]
+
 
 def test_all_ten_archs_registered():
     assert len(ARCHS) == 10
@@ -57,7 +71,7 @@ def test_full_configs_match_assignment():
     assert (c.d_model, c.n_heads, c.n_kv_heads) == (2048, 16, 8)
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 def test_smoke_forward_and_grad(arch):
     cfg = get_config(arch, smoke=True)
     B, S = 2, 32
@@ -81,7 +95,10 @@ def test_smoke_forward_and_grad(arch):
 
 
 @pytest.mark.parametrize(
-    "arch", ["smollm-360m", "gemma3-1b", "chameleon-34b", "llama4-scout-17b-a16e"]
+    "arch",
+    _arch_params(
+        ["smollm-360m", "gemma3-1b", "chameleon-34b", "llama4-scout-17b-a16e"]
+    ),
 )
 def test_smoke_packed_serve(arch):
     """Packed (Vec-LUT serving) params produce finite decode logits that

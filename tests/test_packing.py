@@ -47,7 +47,7 @@ class TestPackRoundtrip:
         st.integers(1, 30),
         st.integers(0, 2**31 - 1),
     )
-    @settings(max_examples=50, deadline=None)
+    @settings(max_examples=20, deadline=None)
     def test_roundtrip_property(self, m, g, kg, seed):
         rng = np.random.default_rng(seed)
         w = rng.integers(-1, 2, size=(m, kg * g)).astype(np.int8)
@@ -82,8 +82,10 @@ class TestFlexiblePacking:
             with pytest.raises(ValueError):
                 pack_group_sizes(k)
 
+    # slow: each drawn (m, k) is a fresh pack/unpack jit compile
+    @pytest.mark.slow
     @given(st.integers(1, 6), GOOD_K, st.integers(0, 2**31 - 1))
-    @settings(max_examples=40, deadline=None)
+    @settings(max_examples=16, deadline=None)
     def test_packed_weight_roundtrip(self, m, k, seed):
         rng = np.random.default_rng(seed)
         w = rng.standard_normal((m, k)).astype(np.float32)

@@ -166,6 +166,28 @@ class TestAdmissionLimits:
         eng2 = Engine(params, cfg, max_slots=1, max_len=32)
         assert eng2.add(Request(rid=0, prompt=prompt.copy(), max_new_tokens=10))
 
+    def test_rejection_does_not_consume_admission(self, served, rng):
+        """A rejected queue head must not waste the tick's one admission:
+        the next queued request is admitted in the SAME tick (regression:
+        the scheduler used to stop after the rejection, idling a free
+        slot for a full tick)."""
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=1, max_len=32)
+        sched = ContinuousBatchingScheduler(eng)
+        bad = Request(
+            rid=0, prompt=rng.integers(0, cfg.vocab, size=30).astype(np.int32),
+            max_new_tokens=30)                       # can never fit
+        fits = Request(
+            rid=1, prompt=rng.integers(0, cfg.vocab, size=8).astype(np.int32),
+            max_new_tokens=4)
+        sched.submit([bad, fits])
+        sched.tick()
+        assert sched.rejected == [bad] and "max_len" in bad.error
+        assert fits.generated          # prefilled on the first tick
+        assert eng.n_active == 1 and fits.slot == 0
+        stats = sched.run_to_completion()
+        assert stats.completed == 1 and stats.rejected == 1
+
     def test_scheduler_rejects_oversized_in_place(self, served, rng):
         """One impossible request must not abort the batch: the scheduler
         marks it rejected (error set, no output) and keeps serving."""
@@ -195,6 +217,83 @@ class TestAdmissionLimits:
                 break
             eng.decode_once()
         assert req.done and len(req.generated) == 8
+
+    def test_exact_fit_boundary_admitted(self, served, rng):
+        """The final generated token is sampled but never written back, so
+        prompt + max_new_tokens - 1 == max_len must be ADMITTED and emit all
+        max_new tokens (regression: the old bound budgeted a phantom cache
+        position for it and wrongly rejected this request)."""
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=1, max_len=32)
+        prompt = rng.integers(0, cfg.vocab, size=25).astype(np.int32)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=8)  # 25+8-1 == 32
+        assert eng.add(req)
+        for _ in range(16):
+            if req.done:
+                break
+            eng.decode_once()
+        assert req.done and len(req.generated) == 8
+        # one more token genuinely overflows and must still be refused
+        eng2 = Engine(params, cfg, max_slots=1, max_len=32)
+        with pytest.raises(ValueError, match="max_len"):
+            eng2.add(Request(rid=1, prompt=prompt.copy(), max_new_tokens=9))
+
+    def test_spec_exact_fit_boundary_admitted(self, served, rng):
+        """Same boundary with speculation: prompt + max_new - 1 + draft_k ==
+        max_len fits (the verify window is budgeted past the last *written*
+        position) and the request completes with every token."""
+        from repro.spec import SpecConfig
+
+        cfg, params = served
+        k = 3
+        eng = Engine(params, cfg, max_slots=1, max_len=32, spec=SpecConfig(k=k))
+        prompt = rng.integers(0, cfg.vocab, size=22).astype(np.int32)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=8)  # 22+8-1+3 == 32
+        assert eng.add(req)
+        for _ in range(16):
+            if req.done:
+                break
+            eng.decode_once()
+        assert req.done and len(req.generated) == 8
+        eng2 = Engine(params, cfg, max_slots=1, max_len=32, spec=SpecConfig(k=k))
+        with pytest.raises(ValueError, match="draft window"):
+            eng2.add(Request(rid=1, prompt=prompt.copy(), max_new_tokens=9))
+
+
+class TestSampleTopK:
+    def test_top_k_at_and_past_vocab(self, rng):
+        """top_k >= V must behave like unrestricted sampling instead of
+        indexing `sort(logits)[:, -top_k]` out of bounds (regression: the
+        unclamped index raises IndexError on jax versions that bounds-check
+        static indices, and silently relies on gather clipping on those
+        that don't)."""
+        import jax.numpy as jnp
+
+        from repro.serve import sample
+
+        v = 8
+        logits = jnp.asarray(rng.normal(size=(3, v)), jnp.float32)
+        for top_k in (v, v + 1, v + 5):
+            toks = np.asarray(sample(logits, jax.random.PRNGKey(0),
+                                     temperature=1.0, top_k=top_k))
+            assert toks.shape == (3,)
+            assert ((0 <= toks) & (toks < v)).all()
+        # clamped top_k keeps the full support → identical to plain sampling
+        full = np.asarray(sample(logits, jax.random.PRNGKey(7), temperature=1.0))
+        clamped = np.asarray(sample(logits, jax.random.PRNGKey(7),
+                                    temperature=1.0, top_k=v + 3))
+        np.testing.assert_array_equal(full, clamped)
+
+    def test_top_k_one_is_greedy(self, rng):
+        import jax.numpy as jnp
+
+        from repro.serve import sample
+
+        logits = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+        toks = sample(logits, jax.random.PRNGKey(1), temperature=1.0, top_k=1)
+        np.testing.assert_array_equal(
+            np.asarray(toks), np.asarray(jnp.argmax(logits, axis=-1))
+        )
 
 
 @pytest.mark.slow

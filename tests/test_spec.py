@@ -22,7 +22,7 @@ from repro.serve import (
     accept_speculative,
     greedy_accept,
 )
-from repro.spec import ModelDrafter, NgramDrafter, SpecConfig
+from repro.spec import Drafter, ModelDrafter, NgramDrafter, SpecConfig
 
 
 @pytest.fixture(scope="module")
@@ -110,6 +110,158 @@ class TestAcceptance:
                                         temperature=1.0)
         assert int(n_acc[0]) == 0
         assert int(out[0, 0]) == 5
+
+    def test_masked_greedy_accept_caps_prefix(self):
+        draft = jnp.asarray([[1, 2, 3], [1, 2, 3]])
+        tgt = jnp.asarray([[1, 2, 3, 4]] * 2)       # every draft matches …
+        mask = jnp.asarray([[True, True, False], [False, False, False]])
+        # … but acceptance may not run past a row's real (unmasked) drafts
+        np.testing.assert_array_equal(
+            np.asarray(greedy_accept(draft, tgt, mask)), [2, 0]
+        )
+
+    def test_masked_greedy_out_is_plain_argmax(self):
+        """A k_eff=0 row under greedy masking is a plain decode row: n_acc 0
+        and out[:, 0] the position-0 argmax; partially masked rows emit the
+        argmax continuation at the first padded position."""
+        rng = jax.random.PRNGKey(0)
+        logits = jax.random.normal(rng, (2, 4, 16))
+        draft = jnp.argmax(logits, axis=-1)[:, :3].astype(jnp.int32)  # perfect
+        mask = jnp.asarray([[True, True, False], [False, False, False]])
+        n_acc, out = accept_speculative(draft, logits, rng, temperature=0.0,
+                                        draft_mask=mask)
+        np.testing.assert_array_equal(np.asarray(n_acc), [2, 0])
+        np.testing.assert_array_equal(np.asarray(out), np.argmax(logits, -1))
+
+    def test_masked_stochastic_never_accepts_padding(self):
+        # point-mass target on the draft tokens → unmasked drafts always
+        # accepted; the mask must still stop acceptance at k_eff
+        v = 8
+        draft = jnp.asarray([[2, 5, 1]], dtype=jnp.int32)
+        onehot = jax.nn.one_hot(jnp.asarray([[2, 5, 1, 7]]), v)
+        logits = jnp.log(onehot * (1 - 1e-6) + 1e-9)
+        mask = jnp.asarray([[True, False, False]])
+        for seed in range(8):
+            n_acc, out = accept_speculative(
+                draft, logits, jax.random.PRNGKey(seed), temperature=1.0,
+                draft_mask=mask,
+            )
+            assert int(n_acc[0]) == 1
+            # correction at the first padded position: a full target sample,
+            # here the point mass at token 5
+            np.testing.assert_array_equal(np.asarray(out[0, :2]), [2, 5])
+
+    def test_rejected_token_never_resampled_on_vanishing_residual(self):
+        """Leviathan guarantee hardening: when the residual (p-q)+ sums to
+        zero (float round-off or an inconsistent proposal q >= p everywhere)
+        the fallback must never re-emit the token just rejected (regression:
+        the old fallback resampled from full p)."""
+        v, k = 8, 2
+        draft = jnp.asarray([[3, 3]], dtype=jnp.int32)
+        logits = jnp.zeros((1, k + 1, v)).at[:, :, 3].set(2.0)  # p(3) ≈ 0.51
+        q = jnp.full((1, k, v), 1e6)    # q >= p everywhere → residual ≡ 0,
+        for seed in range(64):          # accept prob p/q ≈ 0 → always reject
+            n_acc, out = accept_speculative(
+                draft, logits, jax.random.PRNGKey(seed), temperature=1.0,
+                draft_probs=q,
+            )
+            assert int(n_acc[0]) == 0
+            assert int(out[0, 0]) != 3
+
+    def test_stochastic_draft_probs_exact_distribution(self):
+        """With stochastic proposals q fed in as draft_probs, the emitted
+        token at position 0 must be distributed exactly as the target's
+        softmax — the Leviathan exactness property the engine's
+        temperature>0 ModelDrafter path rides on."""
+        v, k, n = 12, 2, 4000
+        tl = jax.random.normal(jax.random.PRNGKey(0), (1, k + 1, v)) * 1.5
+        q = jax.nn.softmax(
+            jax.random.normal(jax.random.PRNGKey(1), (1, k, v)) * 1.5, axis=-1
+        )
+
+        def one(key):
+            kd, ka = jax.random.split(key)
+            draft = jax.random.categorical(kd, jnp.log(q), axis=-1)
+            n_acc, out = accept_speculative(
+                draft.astype(jnp.int32), tl, ka, temperature=1.0, draft_probs=q
+            )
+            return out[0, 0]
+
+        toks = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(2), n))
+        counts = np.bincount(np.asarray(toks), minlength=v) / n
+        p0 = np.asarray(jax.nn.softmax(tl[0, 0]))
+        assert np.abs(counts - p0).sum() < 0.08   # TV; E[TV] ≈ 0.02 at n=4000
+
+    def test_masked_correction_samples_full_target(self):
+        """When every real draft is accepted, the token emitted at the first
+        padded position must be a FULL target sample for that position (it
+        was never proposed, so nothing was rejected there) — not a residual
+        resample."""
+        v, n = 12, 4000
+        tl = jax.random.normal(jax.random.PRNGKey(3), (1, 3, v)) * 1.5
+        # q(pos 0) == p(pos 0) → position 0 always accepted; position 1 padded
+        q = jnp.stack([jax.nn.softmax(tl[:, 0]), jnp.full((1, v), 1.0 / v)], axis=1)
+        mask = jnp.asarray([[True, False]])
+
+        def one(key):
+            kd, ka = jax.random.split(key)
+            draft = jax.random.categorical(kd, jnp.log(q), axis=-1)
+            n_acc, out = accept_speculative(
+                draft.astype(jnp.int32), tl, ka, temperature=1.0,
+                draft_probs=q, draft_mask=mask,
+            )
+            return n_acc[0], out[0, 1]
+
+        n_accs, toks = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(4), n))
+        np.testing.assert_array_equal(np.asarray(n_accs), np.ones(n))
+        counts = np.bincount(np.asarray(toks), minlength=v) / n
+        p1 = np.asarray(jax.nn.softmax(tl[0, 1]))
+        assert np.abs(counts - p1).sum() < 0.08
+
+
+# --------------------------------------------------------------------------
+# Adaptive-K policy (pure config logic, no model)
+# --------------------------------------------------------------------------
+class TestKPolicy:
+    def test_fixed_when_adaptive_disabled(self):
+        assert SpecConfig(k=4).k_policy(0.0) == 4
+        assert SpecConfig(k=4).k_policy(1.0) == 4
+
+    def test_scales_with_acceptance_ewma(self):
+        c = SpecConfig(k=4, adaptive_k=True, k_min=1, skip_below=0.2)
+        assert c.k_policy(1.0) == 4
+        assert c.k_policy(0.5) == 2
+        assert c.k_policy(0.25) == 1     # floored at k_min
+        assert c.k_policy(0.05) == 0     # cold → skip drafting
+
+    def test_cold_slot_probes_after_streak(self):
+        c = SpecConfig(k=4, adaptive_k=True, probe_every=3)
+        assert c.k_policy(0.0, skip_streak=0) == 0
+        assert c.k_policy(0.0, skip_streak=2) == 0
+        assert c.k_policy(0.0, skip_streak=3) == c.k_min  # probe
+
+    def test_knob_validation(self):
+        with pytest.raises(ValueError, match="accept_ewma"):
+            SpecConfig(k=2, accept_ewma=1.0)
+        with pytest.raises(ValueError, match="k_min"):
+            SpecConfig(k=2, k_min=0)
+        with pytest.raises(ValueError, match="k_min"):
+            SpecConfig(k=2, k_min=3)
+        with pytest.raises(ValueError, match="skip_below"):
+            SpecConfig(k=2, skip_below=1.5)
+        with pytest.raises(ValueError, match="probe_every"):
+            SpecConfig(k=2, probe_every=0)
+        with pytest.raises(ValueError, match="stochastic"):
+            SpecConfig(k=2, drafter="ngram", stochastic=True)
+
+    def test_ngram_drafter_skips_slot_k_zero(self):
+        d = NgramDrafter()
+        out = d.propose([np.array([4, 4, 4]), np.array([7, 7, 7])], 2,
+                        slot_k=np.array([0, 2]))
+        np.testing.assert_array_equal(out[0], [0, 0])   # untouched padding
+        np.testing.assert_array_equal(out[1], [7, 7])
+        draft, probs = d.propose([np.array([4, 4])], 2, return_probs=True)
+        assert probs is None                             # deterministic
 
 
 # --------------------------------------------------------------------------
@@ -225,7 +377,9 @@ def _run_engine(cfg, params, prompts, *, spec=None, max_new=8, max_len=64,
 class TestSpecEngine:
     def test_greedy_exactness_ngram(self, served, rng):
         """Acceptance criterion: Engine(spec=...) greedy output is token-for-
-        token identical to the plain engine on the same prompts."""
+        token identical to the plain engine on the same prompts — with fixed
+        K and with per-slot adaptive K (mask/sentinel padding must never
+        leak a token)."""
         cfg, params = served
         prompts = [
             rng.integers(0, cfg.vocab, size=rng.integers(4, 20)).astype(np.int32)
@@ -237,6 +391,13 @@ class TestSpecEngine:
         )
         assert base == spec
         assert eng.spec_steps > 0 and eng.drafted_tokens > 0
+        adapt, _, eng_a = _run_engine(
+            cfg, params, prompts,
+            spec=SpecConfig(k=3, drafter="ngram", adaptive_k=True,
+                            accept_ewma=0.5, skip_below=0.3, probe_every=2),
+        )
+        assert base == adapt
+        assert eng_a.spec_steps > 0
 
     def test_greedy_exactness_model_drafter(self, served, rng):
         cfg, params = served
@@ -289,6 +450,64 @@ class TestSpecEngine:
         assert all(len(g) == 8 for g in out)
         assert all(0 <= t < cfg.vocab for g in out for t in g)
 
+    def test_adaptive_cold_slot_skips_drafting(self, served, rng):
+        """A slot whose drafts keep getting rejected must fall to k_eff=0
+        (plain decode rows), periodically re-probe, and still emit exactly
+        the plain greedy output."""
+
+        class WrongDrafter(Drafter):
+            # proposes last_token+1 — (almost) never the target's greedy pick
+            def __init__(self, vocab):
+                self.vocab = vocab
+
+            def propose(self, contexts, k, *, slot_k=None, rng=None,
+                        temperature=0.0, return_probs=False):
+                out = np.zeros((len(contexts), k), np.int32)
+                for i, ctx in enumerate(contexts):
+                    if ctx is not None:
+                        out[i] = (int(ctx[-1]) + 1) % self.vocab
+                return (out, None) if return_probs else out
+
+        cfg, params = served
+        prompts = [rng.integers(0, cfg.vocab, size=8).astype(np.int32)]
+        base, _, _ = _run_engine(cfg, params, prompts, max_new=14, slots=1)
+        spec_cfg = SpecConfig(k=4, adaptive_k=True, accept_ewma=0.5,
+                              skip_below=0.3, probe_every=3)
+        eng = Engine(params, cfg, max_slots=1, max_len=64, spec=spec_cfg)
+        eng.drafter = WrongDrafter(cfg.vocab)
+        req = Request(rid=0, prompt=prompts[0], max_new_tokens=14)
+        assert eng.add(req)
+        seen_k = set()
+        for _ in range(32):
+            if req.done:
+                break
+            eng.decode_once()
+            seen_k.add(int(eng.slot_k_eff[0]))   # live per-slot k observable
+        assert req.done
+        assert req.generated == base[0]          # exactness survives skipping
+        assert eng.spec_skipped_steps > 0        # the policy did go cold
+        assert 0.0 < eng.skip_rate <= 1.0
+        assert eng.drafted_tokens < eng.spec_slot_steps * spec_cfg.k
+        assert spec_cfg.k in seen_k              # optimistic full-k start …
+        assert 0 in seen_k                       # … decayed to a skip
+
+    def test_stochastic_model_drafter_high_acceptance(self, served, rng):
+        """Self-drafting stochastically at the serving temperature: q ≈ p at
+        every position, so rejection sampling accepts (almost) everything —
+        the acceptance win greedy one-hot proposals throw away."""
+        cfg, params = served
+        prompts = [rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+                   for _ in range(2)]
+        spec_cfg = SpecConfig(k=2, drafter="model", stochastic=True,
+                              draft_params=params, draft_cfg=cfg)
+        out, stats, eng = _run_engine(
+            cfg, params, prompts, spec=spec_cfg, temperature=1.0, seed=9
+        )
+        assert stats.completed == 2
+        assert all(len(g) == 8 for g in out)
+        assert all(0 <= t < cfg.vocab for g in out for t in g)
+        assert eng.acceptance_rate > 0.9      # q == p up to float round-off
+
     def test_spec_refuses_ssm_and_windowed(self, served):
         cfg_ssm = get_config("mamba2-1.3b", smoke=True)
         with pytest.raises(ValueError, match="ssm"):
@@ -309,3 +528,43 @@ class TestSpecEngine:
         assert stats.spec_steps == eng.spec_steps > 0
         assert stats.drafted_tokens == eng.drafted_tokens
         assert stats.decode_tokens_per_step == eng.decode_tokens_per_step
+        assert stats.spec_skipped_steps == eng.spec_skipped_steps == 0
+        assert stats.skip_rate == eng.skip_rate == 0.0
+        assert stats.mean_draft_k == eng.mean_draft_k == 2.0
+
+
+@pytest.mark.slow
+def test_stochastic_spec_matches_plain_sampling_distribution(served):
+    """Acceptance criterion: temperature>0 serving with a stochastic
+    ModelDrafter is *distributionally* identical to plain temperature
+    sampling. On a small vocab, the marginal distribution of the first
+    verify-emitted token over many independent runs must match the plain
+    engine's (total variation below a seeded statistical bound)."""
+    import dataclasses as dc
+
+    cfg0, _ = served
+    cfg = dc.replace(cfg0, vocab=16)
+    params = pack_params(init_lm(jax.random.PRNGKey(1), cfg), cfg)
+    prompt = np.asarray([3, 11, 7, 2, 9, 14], np.int32)
+    n, v = 600, cfg.vocab
+
+    def collect(spec):
+        # one engine reused across trials: jit caches stay warm and the
+        # engine rng advances, giving i.i.d. samples per request
+        eng = Engine(params, cfg, max_slots=1, max_len=32,
+                     temperature=1.5, seed=11, spec=spec)
+        sched = ContinuousBatchingScheduler(eng)
+        toks = []
+        for i in range(n):
+            req = Request(rid=i, prompt=prompt.copy(), max_new_tokens=3)
+            sched.submit([req])
+            sched.run_to_completion()
+            assert len(req.generated) == 3
+            toks.append(req.generated[1])    # first decode/verify-step token
+        return np.bincount(toks, minlength=v) / n
+
+    plain = collect(None)
+    spec = collect(SpecConfig(k=2, drafter="model", stochastic=True,
+                              draft_params=params, draft_cfg=cfg))
+    tv = 0.5 * np.abs(plain - spec).sum()
+    assert tv < 0.15, f"TV(plain, speculative) = {tv:.3f}"
