@@ -23,6 +23,12 @@ Five arms, all landing in BENCH_spec.json via benchmarks.common:
        (SpecConfig(stochastic=True)) samples at the serving temperature and
        feeds its distributions to rejection sampling — the acceptance-rate
        gap is the draft probability mass the greedy mode throws away.
+  (vi) tree-vs-chain verification (SpecConfig(tree=...)): one verify pass
+       carries the whole draft tree, so each slot's verify row holds
+       n_nodes > k+1 candidates — rows report verified nodes/step,
+       tokens/step, and the vector-vs-scalar verify-GeMM speedup at the
+       tree's M, the deeper multi-token regime the paper's vector lookup
+       targets.
 """
 from __future__ import annotations
 
@@ -178,10 +184,12 @@ def _emit_spec_row(name, st, *, k, batch, arm):
         name, st.wall_s,
         f"{st.decode_tok_s:.1f} decode tok/s, "
         f"{st.decode_tokens_per_step:.2f} tok/step, "
+        f"{st.nodes_per_step:.1f} nodes/step, "
         f"accept {st.acceptance_rate:.2f}, mean_k {st.mean_draft_k:.2f}, "
         f"skip {st.skip_rate:.2f}",
         k=k, batch=batch, arm=arm,
         tokens_per_step=st.decode_tokens_per_step,
+        nodes_per_step=st.nodes_per_step,
         acceptance_rate=st.acceptance_rate,
         mean_draft_k=st.mean_draft_k,
         skip_rate=st.skip_rate,
@@ -236,11 +244,67 @@ def _bench_stochastic(quick: bool):
                    batch=b, arm="stochastic_draft")
 
 
+# --------------------------------------------------------------------------
+# (vi) tree-vs-chain multi-candidate verification
+# --------------------------------------------------------------------------
+#: branching factors of the benchmark draft tree (depth = the sweep's k)
+TREE = (2, 2)
+
+
+def _bench_tree(quick: bool):
+    cfg = get_config("smollm-360m", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    rng = np.random.default_rng(3)
+    max_new = 16 if quick else 32
+    k = KS[1]
+    n_nodes = SpecConfig(k=k, tree=TREE).tree_struct().n_nodes
+    # (a) vector-vs-scalar LUT on the verify GeMM at chain vs tree M — the
+    # per-slot parallel-token count the one flattened pass hands the kernels
+    m_out, k_in = GEMM_SHAPE
+    w = jnp.asarray(rng.normal(size=(m_out, k_in)), jnp.float32)
+    tw = ternary_quantize(w)
+    pw = pack_weight(tw.values, tw.scale, "i2")
+    for b in GEMM_BATCHES[:1] if quick else GEMM_BATCHES:
+        for arm, m in (("chain", k + 1), ("tree", n_nodes)):
+            n = b * m
+            a = jnp.asarray(rng.normal(size=(k_in, n)), jnp.float32)
+            secs = time_paired(
+                {
+                    "vector": lambda a_: vlut_gemm(pw, a_),
+                    "scalar": lambda a_: scalar_lut_gemm(pw, a_),
+                },
+                a, warmup=1, rounds=9, calls=3,
+            )
+            emit(
+                f"verify_gemm_tree/{arm}K{k}b{b}/vector", secs["vector"],
+                f"{secs['scalar'] / secs['vector']:.2f}x vs scalar at M={m}",
+                m=m, n_tokens=n, arm=f"{arm}_gemm",
+                speedup=secs["scalar"] / secs["vector"],
+            )
+            emit(
+                f"verify_gemm_tree/{arm}K{k}b{b}/scalar", secs["scalar"], "",
+                m=m, n_tokens=n, arm=f"{arm}_gemm_scalar",
+            )
+    # (b) end-to-end tree vs chain serving (n-gram drafter)
+    for b in BATCHES[:1] if quick else BATCHES:
+        prompts = _repetitive_prompts(rng, 2 * b, cfg.vocab)
+        chain = _serve(params, cfg, [p.copy() for p in prompts],
+                       spec=SpecConfig(k=k, drafter="ngram"),
+                       slots=b, max_new=max_new)
+        _emit_spec_row(f"spec/chain/K{k}b{b}", chain, k=k, batch=b,
+                       arm="chain")
+        treed = _serve(params, cfg, [p.copy() for p in prompts],
+                       spec=SpecConfig(k=k, drafter="ngram", tree=TREE),
+                       slots=b, max_new=max_new)
+        _emit_spec_row(f"spec/tree/K{k}b{b}", treed, k=k, batch=b, arm="tree")
+
+
 def run(quick: bool = True):
     _bench_verify_gemm(quick)
     _bench_engine(quick)
     _bench_adaptive(quick)
     _bench_stochastic(quick)
+    _bench_tree(quick)
     write_results("spec")
 
 

@@ -9,6 +9,11 @@ request stream several ways and prints the accept/throughput accounting:
             the random half of the workload, which prompt-lookup can't
             draft for) skip drafting entirely — watch the mean_k / skip
             columns split the warm and cold halves
+  tree      tree-structured verification (--tree B1,B2,...): the drafter
+            proposes top-B candidates at each of the first depths and ONE
+            flattened verify pass scores the whole tree — each slot's row
+            carries n_nodes > K+1 candidates (the nodes/step column), the
+            deepest multi-token regime the Vec-LUT kernels see
   oracle    self-drafting with the target's own weights — acceptance is 1.0
             by construction, showing the verification-side ceiling (K+1
             tokens per step)
@@ -59,6 +64,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--k", type=int, default=4, help="draft tokens per step")
+    ap.add_argument("--tree", default="2,2",
+                    help="draft-tree branching factors for the tree arm "
+                         "('' skips it)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help=">0 switches to the stochastic-drafting demo")
     args = ap.parse_args()
@@ -105,6 +113,13 @@ def main():
     print(f"adaptive: {fmt(st)}   mean_k {st.mean_draft_k:.2f}   "
           f"skip {st.skip_rate:.2f}")
     assert adaptive == plain, "adaptive-K greedy decode must stay exact"
+
+    if args.tree:
+        branching = tuple(int(x) for x in args.tree.split(","))
+        treed, st = serve(params, cfg, prompts, args,
+                          spec=SpecConfig(k=args.k, tree=branching))
+        print(f"tree    : {fmt(st)}   nodes/step {st.nodes_per_step:.1f}")
+        assert treed == plain, "greedy tree decode must stay exact"
 
     oracle_spec = SpecConfig(k=args.k, drafter="model",
                              draft_params=params, draft_cfg=cfg)

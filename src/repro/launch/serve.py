@@ -7,6 +7,8 @@ Add --spec-k N for speculative decoding (n-gram drafter, N draft tokens per
 batched verify step); the summary line then reports acceptance and tok/step.
 --spec-adaptive adapts each slot's draft length to its acceptance EWMA
 (cold slots skip drafting entirely), adding mean_k and skip-rate columns.
+--spec-tree B1,B2,... verifies a draft *tree* (top-B candidates at each of
+the first depths) in one flattened pass, adding a nodes/step column.
 """
 import argparse
 
@@ -36,9 +38,14 @@ def main():
     ap.add_argument("--spec-adaptive", action="store_true",
                     help="per-slot adaptive draft length from the running "
                          "acceptance rate (cold slots skip drafting)")
+    ap.add_argument("--spec-tree", default="",
+                    help="comma-separated branching factors (e.g. '2,2') for "
+                         "tree-structured multi-candidate verification")
     args = ap.parse_args()
-    if args.spec_adaptive and not args.spec_k:
-        ap.error("--spec-adaptive requires --spec-k N (N >= 1)")
+    if (args.spec_adaptive or args.spec_tree) and not args.spec_k:
+        ap.error("--spec-adaptive/--spec-tree require --spec-k N (N >= 1)")
+    if args.spec_adaptive and args.spec_tree:
+        ap.error("--spec-tree and --spec-adaptive are mutually exclusive")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     init = encdec_init if cfg.family == "encdec" else init_lm
@@ -50,7 +57,12 @@ def main():
     if args.spec_k:
         from repro.spec import SpecConfig
 
-        spec = SpecConfig(k=args.spec_k, adaptive_k=args.spec_adaptive)
+        tree = (
+            tuple(int(x) for x in args.spec_tree.split(","))
+            if args.spec_tree else None
+        )
+        spec = SpecConfig(k=args.spec_k, adaptive_k=args.spec_adaptive,
+                          tree=tree)
     engine = Engine(
         params, cfg, max_slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, spec=spec,
@@ -78,6 +90,8 @@ def main():
         spec_cols += (
             f" mean_k={stats.mean_draft_k:.2f} skip={stats.skip_rate:.2f}"
         )
+    if stats.spec_steps and args.spec_tree:
+        spec_cols += f" nodes/step={stats.nodes_per_step:.1f}"
     rej_cols = f" rejected={stats.rejected}" if stats.rejected else ""
     ttft_ms = 1e3 * float(np.median(stats.ttft_s)) if stats.ttft_s else 0.0
     print(

@@ -2,6 +2,7 @@
 FFNs, enc-dec) with train (QAT) and serve (Vec-LUT packed) modes."""
 from .common import linear_apply, linear_init, rmsnorm_apply, rope
 from .decoder import (
+    compact_tree_cache,
     compress_layout,
     decode_step,
     init_cache,
@@ -21,7 +22,8 @@ from .convert import pack_params, packed_param_bytes, param_count
 
 __all__ = [
     "linear_apply", "linear_init", "rmsnorm_apply", "rope",
-    "compress_layout", "decode_step", "init_cache", "init_lm", "lm_hidden",
+    "compact_tree_cache", "compress_layout", "decode_step", "init_cache",
+    "init_lm", "lm_hidden",
     "lm_logits", "lm_loss", "prefill", "prefill_bucket", "prefill_into_slot",
     "rollback_cache", "scatter_slot_cache", "verify_step",
     "encdec_init", "encdec_loss", "encode",

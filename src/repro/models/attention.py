@@ -65,6 +65,7 @@ def sdpa(
     softcap: float = 0.0,
     chunk: int = 512,
     dense_max: int = 2048,
+    extra_mask: jax.Array | None = None,   # (B, Sq, Skv) ANDed into the mask
 ) -> jax.Array:
     b, sq, h, d = q.shape
     dv = v.shape[-1]
@@ -75,8 +76,10 @@ def sdpa(
 
     if k.shape[1] <= dense_max or k.shape[1] % chunk:
         s = _scores(qg, k, scale, softcap)                       # (B,KV,G,Sq,Skv)
-        m = _mask(q_pos, kv_pos, causal, window)[:, None, None]
-        s = jnp.where(m, s, NEG_INF)
+        m = _mask(q_pos, kv_pos, causal, window)
+        if extra_mask is not None:
+            m = m & extra_mask
+        s = jnp.where(m[:, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
         return out.reshape(b, sq, h, dv)
@@ -86,12 +89,19 @@ def sdpa(
     k_c = k.reshape(b, nc, chunk, kv, d).transpose(1, 0, 2, 3, 4)
     v_c = v.reshape(b, nc, chunk, kv, dv).transpose(1, 0, 2, 3, 4)
     p_c = kv_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+    e_c = (
+        None if extra_mask is None
+        else extra_mask.reshape(b, sq, nc, chunk).transpose(2, 0, 1, 3)
+    )
 
     def step(carry, xs):
         m_run, l_run, acc = carry
-        kc, vc, pc = xs
+        kc, vc, pc = xs[:3]
         s = _scores(qg, kc, scale, softcap)                      # (B,KV,G,Sq,c)
-        msk = _mask(q_pos, pc, causal, window)[:, None, None]
+        msk = _mask(q_pos, pc, causal, window)
+        if e_c is not None:
+            msk = msk & xs[3]
+        msk = msk[:, None, None]
         s = jnp.where(msk, s, NEG_INF)
         m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
         alpha = jnp.exp(m_run - m_new)
@@ -106,9 +116,29 @@ def sdpa(
         jnp.zeros((b, kv, g, sq), jnp.float32),
         jnp.zeros((b, kv, g, sq, dv), jnp.float32),
     )
-    (m_run, l_run, acc), _ = jax.lax.scan(step, init, (k_c, v_c, p_c))
+    xs = (k_c, v_c, p_c) if e_c is None else (k_c, v_c, p_c, e_c)
+    (m_run, l_run, acc), _ = jax.lax.scan(step, init, xs)
     out = acc / jnp.maximum(l_run, 1e-30)[..., None]
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def tree_step_gate(tree, start: jax.Array, s: int, length: int) -> jax.Array:
+    """(B, S, L) bool gate ANDed into a tree-verify step's attention mask.
+
+    The step's S incoming tokens form a draft tree (spec.tree.DraftTree) and
+    occupy one cache slot each — slots start..start+S-1, node i at slot
+    start+i — while their *positions* are start+depth(node), shared between
+    siblings. Inside that slot window a query node may attend only its tree
+    ancestors (itself included); outside it the gate is True and the usual
+    position mask (cached prefix: kv_pos <= q_pos; stale slots: invalidated
+    or position-masked) stands alone."""
+    anc = jnp.asarray(tree.ancestors)                                 # (S, S)
+    o = jnp.arange(length, dtype=jnp.int32)[None, :] - start[:, None]  # (B, L)
+    in_step = (o >= 0) & (o < s)
+    lookup = anc[:, jnp.clip(o, 0, s - 1)]                            # (S, B, L)
+    return jnp.where(
+        in_step[:, None, :], jnp.transpose(lookup, (1, 0, 2)), True
+    )
 
 
 # --------------------------------------------------------------------------
@@ -168,6 +198,7 @@ def attn_apply(
     cache: Params | None = None,
     causal: bool = True,
     verify: bool = False,
+    tree=None,
 ) -> tuple[jax.Array, Params | None]:
     """Self-attention. cache=None → pure (train/eval). Otherwise prefill
     (S>1: fills cache from position cache.idx) or decode (S==1: appends).
@@ -175,7 +206,14 @@ def attn_apply(
     verify=True is the speculative multi-token decode step: S>1 incoming
     tokens are appended to the cache and attend against the *full* cache
     (prior context + themselves, position-causal) instead of the prefill
-    branch's within-sequence attention — see models.verify_step."""
+    branch's within-sequence attention — see models.verify_step.
+
+    tree (a spec.tree.DraftTree, verify only) marks the S incoming tokens as
+    a flattened draft *tree*: node i is written to its own cache slot
+    start+i but carries position start+depth(i) (siblings share positions —
+    RoPE and the causal mask see depths, so the rollback stale-entry safety
+    argument is unchanged), and the in-step attention is restricted to tree
+    ancestors via `tree_step_gate`."""
     if verify and spec.window:
         raise ValueError(
             "multi-token verification needs a rollbackable cache; windowed "
@@ -183,7 +221,12 @@ def attn_apply(
         )
     b, s, _ = x.shape
     start = cache["idx"] if cache is not None else jnp.zeros((b,), jnp.int32)
-    positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B,S)
+    if tree is not None:
+        # per-node positions = node depth under the slot's next position
+        offsets = jnp.asarray(tree.depths, jnp.int32)
+    else:
+        offsets = jnp.arange(s, dtype=jnp.int32)
+    positions = start[:, None] + offsets[None, :]                     # (B,S)
     q, k, v = _project_qkv(p, x, cfg, spec, mode, positions)
 
     if cache is None:
@@ -214,7 +257,12 @@ def attn_apply(
             cv = cache["v"].at[bidx, dst].set(v[:, src])
             sp = cache["slot_pos"].at[bidx, dst].set(positions[:, src])
         else:
-            slots = positions % buf                                 # (B, S)
+            if tree is not None:
+                # one slot per tree node; siblings share a *position* but
+                # must not share a slot, or the scatter would clobber them
+                slots = (start[:, None] + jnp.arange(s, dtype=jnp.int32)) % buf
+            else:
+                slots = positions % buf                             # (B, S)
             ck = cache["k"].at[bidx, slots].set(k)
             cv = cache["v"].at[bidx, slots].set(v)
             sp = cache["slot_pos"].at[bidx, slots].set(positions)
@@ -228,12 +276,18 @@ def attn_apply(
             # decode / verify: the scatter above already wrote the incoming
             # K/V, so attending (ck, cv) with slot positions covers both the
             # cached prefix and the new tokens; causality comes from the
-            # position mask (kv_pos <= q_pos).
+            # position mask (kv_pos <= q_pos), plus the ancestor gate over
+            # this step's slot window when the tokens form a draft tree.
+            gate = (
+                tree_step_gate(tree, start, s, ck.shape[1])
+                if tree is not None else None
+            )
             out = sdpa(
                 q, ck, cv, positions, sp,
                 causal=causal, window=spec.window,
                 softcap=cfg.attn_logit_softcap,
                 chunk=cfg.attn_chunk, dense_max=cfg.attn_dense_max,
+                extra_mask=gate,
             )
         else:
             # prefill: attend within the incoming sequence itself.

@@ -64,17 +64,19 @@ def block_apply(
     enc_out: jax.Array | None = None,
     causal: bool = True,
     verify: bool = False,
+    tree=None,
 ):
     """→ (x, new_cache, aux_loss)."""
     h = rmsnorm_apply(p["mixer_norm"], x, cfg.norm_eps)
     if spec.mixer == "attn":
         y, new_cache = attn_apply(
             p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache,
-            causal=causal, verify=verify,
+            causal=causal, verify=verify, tree=tree,
         )
     elif spec.mixer == "mla":
         y, new_cache = mla_apply(
-            p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache, verify=verify
+            p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache,
+            verify=verify, tree=tree,
         )
     else:
         if verify:

@@ -89,6 +89,7 @@ def _stage_apply(
     enc_out: jax.Array | None,
     causal: bool,
     verify: bool = False,
+    tree=None,
 ):
     has_cache = cache is not None
     carry_cache = has_cache and cfg.cache_in_carry
@@ -121,6 +122,7 @@ def _stage_apply(
                 x, nc, a = block_apply(
                     p_rep[f"b{i}"], x, cfg=cfg, spec=spec, mode=mode,
                     cache=c, enc_out=enc_out, causal=causal, verify=verify,
+                    tree=tree,
                 )
                 x = shard_act(x, "btd")
                 aux = aux + a
@@ -149,6 +151,7 @@ def _stage_apply(
             x, nc, a = block_apply(
                 p_rep[f"b{i}"], x, cfg=cfg, spec=spec, mode=mode,
                 cache=c, enc_out=enc_out, causal=causal, verify=verify,
+                tree=tree,
             )
             x = shard_act(x, "btd")
             aux = aux + a
@@ -201,10 +204,14 @@ def lm_hidden(
     enc_out: jax.Array | None = None,
     causal: bool = True,
     verify: bool = False,
+    tree=None,
 ):
     """inputs: int32 tokens (B, S) or pre-embedded (B, S, d) (stub frontends).
     → (hidden (B,S,d), new_cache, aux_loss). verify=True: S>1 tokens are a
-    speculative decode step appended to the cache (see verify_step)."""
+    speculative decode step appended to the cache (see verify_step); tree
+    marks them as a flattened draft tree (verify only)."""
+    if tree is not None and not verify:
+        raise ValueError("tree attention is only defined for verify steps")
     if inputs.dtype in (jnp.int32, jnp.int64):
         x = embed_apply(params["embed"], inputs, cfg)
     else:
@@ -217,7 +224,7 @@ def lm_hidden(
         c = cache[si] if cache is not None else None
         x, aux, nc = _stage_apply(
             params["stages"][si], x, aux, cfg=cfg, pattern=pat, mode=mode,
-            cache=c, enc_out=enc_out, causal=causal, verify=verify,
+            cache=c, enc_out=enc_out, causal=causal, verify=verify, tree=tree,
         )
         new_cache.append(nc)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
@@ -305,7 +312,7 @@ def decode_step(params, tokens, cache, cfg, *, mode="serve"):
     return logits, new_cache
 
 
-def verify_step(params, tokens, cache, cfg, *, mode="serve"):
+def verify_step(params, tokens, cache, cfg, *, mode="serve", tree=None):
     """Batched multi-token decode — the speculative-verification step.
 
     tokens: (B, S) int32 candidate tokens per slot (column 0 is the last
@@ -316,11 +323,19 @@ def verify_step(params, tokens, cache, cfg, *, mode="serve"):
     tokens[:, :j+1] — one batched M=S pass through the Vec-LUT mpGeMM
     kernels instead of S sequential M=1 passes.
 
+    With tree (a spec.tree.DraftTree, S == tree.n_nodes) the tokens are a
+    flattened draft *tree* in the DraftTree node order: node j attends the
+    cached prefix plus its tree ancestors only, carries position idx +
+    depth(j), and is written to its own cache slot idx + j — so logits[:, j]
+    is exactly what sequential decode would produce after the root-to-j path.
+    After acceptance the engine compacts the winning path's slots back to
+    contiguous positions (compact_tree_cache) before rolling back.
+
     → (logits (B, S, V), new_cache with idx advanced by S). Rejected suffixes
-    are undone with rollback_cache. S is expected small (draft_k + 1): the
-    full (B, S, V) logits are materialized."""
+    are undone with rollback_cache. S is expected small (draft_k + 1, or the
+    tree's node count): the full (B, S, V) logits are materialized."""
     h, new_cache, _ = lm_hidden(
-        params, tokens, cfg, mode=mode, cache=cache, verify=True
+        params, tokens, cfg, mode=mode, cache=cache, verify=True, tree=tree
     )
     logits = _head_matmul(params, h, cfg)
     return logits, new_cache
@@ -364,6 +379,51 @@ def scatter_slot_cache(full_cache, single_cache, slot: int):
         )
 
     return jax.tree.map(scat, full_cache, single_cache)
+
+
+def compact_tree_cache(cache, pos, sel, take):
+    """Compact a tree verify step's cache window onto the accepted path.
+
+    A tree verify (verify_step(..., tree=...)) writes node j's K/V (or MLA
+    latents) to its own slot pos+j while recording position pos+depth(j).
+    Acceptance keeps one root-to-leaf path; its depth-d node must end up at
+    slot pos+d — the contiguous slot==position layout every later prefill /
+    decode / verify assumes — before the idx rollback.
+
+    pos:  (B,) int32 — the step's base idx (the root's slot/position).
+    sel:  (B, N) int32 — window gather map: slot pos+d receives the entry of
+          node sel[b, d] (the accepted path's depth-d node for d < take,
+          identity elsewhere; N = the tree's node count).
+    take: (B,) int32 — tokens kept this step (window slots d < take stay
+          live; the rest get slot_pos = -1 so a stale sibling's small
+          position can never satisfy a future query's position mask — the
+          rollback stale-entry safety argument for trees).
+
+    Only the per-length-axis cache leaves (attn k/v/slot_pos, MLA
+    ckv/krope) are touched; everything is a (B, N)-window gather/scatter,
+    never a full-length pass. idx is left to rollback_cache."""
+    pos = pos.astype(jnp.int32)
+    sel = sel.astype(jnp.int32)
+    take = take.astype(jnp.int32)
+    n = sel.shape[1]
+    src = pos[:, None] + sel                                     # (B, N)
+    dst = pos[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]  # (B, N)
+    live = jnp.arange(n, dtype=jnp.int32)[None, :] < take[:, None]
+
+    def fix(path, leaf):
+        key = getattr(path[-1], "key", None)
+        if key not in ("k", "v", "slot_pos", "ckv", "krope"):
+            return leaf                  # idx (rollback's job), cross xk/xv
+        b = leaf.shape[1]
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        if key == "slot_pos":
+            vals = jnp.where(live, dst, -1)
+            return leaf.at[:, bidx, dst].set(vals.astype(leaf.dtype))
+        idx = src.reshape((1,) + src.shape + (1,) * (leaf.ndim - 3))
+        gathered = jnp.take_along_axis(leaf, idx, axis=2)
+        return leaf.at[:, bidx, dst].set(gathered)
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
 
 
 def rollback_cache(cache, new_idx):

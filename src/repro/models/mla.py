@@ -24,7 +24,7 @@ from .common import (
     rmsnorm_init,
     rope,
 )
-from .attention import sdpa
+from .attention import sdpa, tree_step_gate
 
 
 def _dims(cfg):
@@ -113,21 +113,40 @@ def mla_apply(
     mode: str,
     cache: Params | None = None,
     verify: bool = False,
+    tree=None,
 ) -> tuple[jax.Array, Params | None]:
     """verify=True runs the absorbed-latent decode path for S>1 incoming
     tokens (speculative multi-token verification) with a per-query causal
-    position mask; without it S>1+cache means prefill (within-sequence)."""
+    position mask; without it S>1+cache means prefill (within-sequence).
+
+    tree (spec.tree.DraftTree, verify only): the S tokens are a flattened
+    draft tree — node i is written to its own slot start+i but carries
+    position start+depth(i), and the in-step attention is restricted to tree
+    ancestors (tree_step_gate). The MLA cache has no slot_pos record (slot
+    index doubles as position); tree writes briefly break that equality
+    inside the step window, where the ancestor gate is exact, and the engine
+    compacts the winning path back to slot==position before the next step —
+    stale non-path slots sit at indices ≥ the rolled-back idx + are always
+    rewritten by the next (equally wide) verify scatter before being
+    attended, so the index-as-position mask never reads them."""
     ql, kvl, nope, rp, vd = _dims(cfg)
     b, s, _ = x.shape
     h = cfg.n_heads
     start = cache["idx"] if cache is not None else jnp.zeros((b,), jnp.int32)
-    positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    if tree is not None:
+        offsets = jnp.asarray(tree.depths, jnp.int32)
+    else:
+        offsets = jnp.arange(s, dtype=jnp.int32)
+    positions = start[:, None] + offsets[None, :]
     q_nope, q_rope, ckv, k_rope = _latents(p, x, cfg, mode, positions)
 
     new_cache = None
     if cache is not None:
         bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
-        slots = positions                                             # full buffer
+        if tree is not None:                        # one slot per tree node
+            slots = start[:, None] + jnp.arange(s, dtype=jnp.int32)
+        else:
+            slots = positions                                         # full buffer
         new_cache = {
             "ckv": shard_act(
                 cache["ckv"].at[bidx, slots].set(ckv.astype(cache["ckv"].dtype)),
@@ -154,6 +173,14 @@ def mla_apply(
         ) * scale
         kv_pos = jnp.arange(ckv_all.shape[1], dtype=jnp.int32)[None, :]
         valid = kv_pos[:, None, :] <= positions[:, :, None]          # (B,Sq,L)
+        if tree is not None:
+            # inside the step's slot window the index-as-position mask is
+            # meaningless (an ancestor's slot index can exceed the query's
+            # depth-based position) — the ancestor gate *replaces* it there
+            o = kv_pos - start[:, None]                              # (B, L)
+            in_step = (o >= 0) & (o < s)
+            gate = tree_step_gate(tree, start, s, ckv_all.shape[1])
+            valid = jnp.where(in_step[:, None, :], gate, valid)
         scores = jnp.where(valid[:, None, :, :], scores, -1e30)     # (B,H,Sq,L)
         probs = jax.nn.softmax(scores, axis=-1)
         lat = jnp.einsum("bhqs,bsk->bqhk", probs, ckv_all)

@@ -1,10 +1,10 @@
 """repro.serve — slot-based continuous-batching serving engine (optionally
 speculative: `Engine(spec=repro.spec.SpecConfig(...))`)."""
 from .engine import Engine, Request
-from .sampling import accept_speculative, greedy_accept, sample
+from .sampling import accept_speculative, accept_tree, greedy_accept, sample
 from .scheduler import ContinuousBatchingScheduler, ServeStats
 
 __all__ = [
     "Engine", "Request", "sample", "greedy_accept", "accept_speculative",
-    "ContinuousBatchingScheduler", "ServeStats",
+    "accept_tree", "ContinuousBatchingScheduler", "ServeStats",
 ]

@@ -25,6 +25,22 @@ handed the matching `draft_mask` and never accepts past a slot's k_eff.
 the serving temperature and threads the per-position draft distributions
 into acceptance (`draft_probs`), so temperature>0 serving emits exact
 target-model samples with real draft probability mass credited.
+
+`SpecConfig(tree=(b1, b2, ...))` switches the step to tree-structured
+multi-candidate verification: the drafter proposes a token *tree* of depth k
+(top-b_d candidates at each of the first depths, one chain continuation per
+leaf after), flattened in DraftTree node order into a single (B, n_nodes)
+verify pass — each slot's verify row carries n_nodes > k+1 candidates
+through the Vec-LUT kernels. Inside the step, node i occupies cache slot
+idx+i with position idx+depth(i) and attends the cached prefix plus its tree
+ancestors only, so its logits are exactly sequential decode's after the
+root-to-i path; `accept_tree` keeps the longest accepted root-to-leaf path,
+`compact_tree_cache` gathers the winners onto contiguous slots (and stamps
+slot_pos = -1 on the losers, preserving the rollback stale-entry safety
+argument: every surviving entry's recorded position is either live-correct
+or unreachable), and the idx rolls back to the accepted depth. Greedy tree
+output stays token-for-token identical to plain decode; chain mode
+(tree=None) is bit-identical to pre-tree behavior.
 """
 from __future__ import annotations
 
@@ -38,12 +54,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
-from repro.models import decode_step as model_decode
+from repro.models import compact_tree_cache, decode_step as model_decode
 from repro.models import init_cache, prefill as model_prefill
 from repro.models import prefill_into_slot, rollback_cache
 from repro.models import verify_step as model_verify
 from repro.spec import SpecConfig
-from .sampling import accept_speculative, sample
+from .sampling import accept_speculative, accept_tree, sample
 
 
 # single definitions of the speculative metrics, shared by Engine (live
@@ -69,6 +85,13 @@ def spec_mean_k(
     """Mean effective draft length over the slot steps that did draft."""
     drafting = spec_slot_steps - spec_skipped_steps
     return drafted_tokens / drafting if drafting else 0.0
+
+
+def spec_nodes_per_step(verified_nodes: int, spec_slot_steps: int) -> float:
+    """Mean candidate tokens one slot's verify row carries per step — k+1 in
+    chain mode, the tree's node count under tree verification (1.0 when
+    unspeculated). This is the M the Vec-LUT mpGeMM kernels see per slot."""
+    return verified_nodes / spec_slot_steps if spec_slot_steps else 1.0
 
 
 @dataclasses.dataclass
@@ -145,6 +168,7 @@ class Engine:
         # speculative decoding (draft → verify → accept)
         self.spec = spec
         self.drafter = None
+        self._tree = None
         if spec is not None:
             bad = [s.mixer for s in cfg.layer_specs() if s.mixer == "ssm"]
             if bad:
@@ -159,10 +183,29 @@ class Engine:
                     "whose in-window history a rollback would clobber"
                 )
             self.drafter = spec.build(max_slots=max_slots, max_len=max_len, mode=mode)
+            # tree mode: the static DraftTree layout is baked into the
+            # verify trace (per-node depths/positions + ancestor mask) and
+            # into the post-acceptance window compaction
+            self._tree = spec.tree_struct()
             self._verify = jax.jit(
-                lambda p, c, t: model_verify(p, t, c, cfg, mode=mode),
+                lambda p, c, t: model_verify(
+                    p, t, c, cfg, mode=mode, tree=self._tree
+                ),
                 donate_argnums=(1,),
             )
+            if self._tree is not None:
+                self._compact = jax.jit(compact_tree_cache, donate_argnums=(0,))
+                if temperature > 0.0:
+                    import warnings
+
+                    warnings.warn(
+                        "tree verification at temperature>0 greedy-matches "
+                        "the draft nodes and only *samples* the correction "
+                        "token — output is greedy-filtered, not an exact "
+                        "target-temperature sample (chain mode is exact; "
+                        "see sampling.accept_tree's TODO)",
+                        stacklevel=3,
+                    )
         # per-slot adaptive-K state: acceptance EWMA (slots start optimistic
         # at 1.0 on admission), the consecutive-skip streak that triggers a
         # cold slot's k_min probe, and the last k_eff the policy chose
@@ -177,22 +220,35 @@ class Engine:
         self.spec_skipped_steps = 0  # slot steps that skipped drafting (k_eff=0)
         self.drafted_tokens = 0
         self.accepted_tokens = 0
+        self.verified_nodes = 0     # candidate tokens verified (Σ per slot)
 
     # ------------------------------------------------------------------
     @property
     def _draft_k(self) -> int:
         return self.spec.k if self.spec is not None else 0
 
+    @property
+    def _draft_window(self) -> int:
+        """Cache slots one verify step writes past the root's position: k in
+        chain mode, the tree's draft-node count under tree verification
+        (every flattened node gets its own slot)."""
+        if self._tree is not None:
+            return self._tree.n_draft
+        return self._draft_k
+
     def _validate(self, req: Request) -> None:
         """Reject requests that would overflow the slot KV cache: the prompt
-        plus every decode position (and, speculatively, up to `k` draft
-        positions past the last kept token) must fit in max_len. The final
-        generated token is sampled but never written back, so it needs no
-        cache position: prompt + max_new_tokens - 1 (+ draft window) is the
-        exact budget."""
-        need = len(req.prompt) + req.max_new_tokens - 1 + self._draft_k
+        plus every decode position (and, speculatively, the draft window
+        past the last kept token) must fit in max_len. The final generated
+        token is sampled but never written back, so it needs no cache
+        position: prompt + max_new_tokens - 1 (+ draft window) is the exact
+        budget."""
+        need = len(req.prompt) + req.max_new_tokens - 1 + self._draft_window
         if need > self.max_len:
-            extra = f" + draft window ({self._draft_k})" if self._draft_k else ""
+            extra = (
+                f" + draft window ({self._draft_window})"
+                if self._draft_window else ""
+            )
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + "
                 f"max_new_tokens - 1 ({req.max_new_tokens - 1}){extra} = {need} "
@@ -249,10 +305,10 @@ class Engine:
         Admission bounds this (so this never fires for admitted requests —
         it is a safety re-check against buffer scribbles), but it must use
         the same exact bound: the last generated token is never written, so
-        the next step writes positions next_pos .. next_pos + draft_k where
+        the next step writes slots next_pos .. next_pos + draft_window where
         next_pos is the cache slot last_token will occupy."""
         next_pos = len(req.prompt) + len(req.generated) - 1  # last_token's slot
-        return next_pos + self._draft_k >= self.max_len
+        return next_pos + self._draft_window >= self.max_len
 
     def _finish_slot(self, slot: int, req: Request, now: float):
         req.done = True
@@ -268,6 +324,8 @@ class Engine:
         this is draft → verify → accept (1..k+1 tokens per slot)."""
         if not self.active.any():
             return
+        if self._tree is not None:
+            return self._decode_spec_tree()
         if self.spec is not None:
             return self._decode_spec()
         with kernel_ops.dispatch_override(**self._mpgemm):
@@ -311,6 +369,20 @@ class Engine:
             n_acc / k_eff
         )
 
+    def _gather_contexts(self):
+        """Per-slot drafting inputs: the full token context (prompt +
+        generated; None for free slots) and the cache idx of the last
+        sampled token. → (contexts, pos)."""
+        contexts: list = [None] * self.max_slots
+        pos = np.zeros(self.max_slots, np.int64)     # per-slot cache idx
+        for slot, req in self.slot_req.items():
+            if self.active[slot]:
+                contexts[slot] = np.concatenate(
+                    [np.asarray(req.prompt, np.int64), np.asarray(req.generated, np.int64)]
+                )
+                pos[slot] = len(req.prompt) + len(req.generated) - 1
+        return contexts, pos
+
     def _decode_spec(self):
         """One speculative decode step: drafter proposal, a single batched
         (B, K+1) verify pass through the Vec-LUT kernels, longest-accepted-
@@ -321,14 +393,7 @@ class Engine:
         draft_mask handed to accept_speculative stops acceptance at k_eff
         (a k_eff=0 row is a plain last-token decode)."""
         k = self.spec.k
-        contexts: list = [None] * self.max_slots
-        pos = np.zeros(self.max_slots, np.int64)     # per-slot cache idx
-        for slot, req in self.slot_req.items():
-            if self.active[slot]:
-                contexts[slot] = np.concatenate(
-                    [np.asarray(req.prompt, np.int64), np.asarray(req.generated, np.int64)]
-                )
-                pos[slot] = len(req.prompt) + len(req.generated) - 1
+        contexts, pos = self._gather_contexts()
         k_eff = self._choose_k_eff()
         self.slot_k_eff = k_eff.copy()
         stochastic = self.spec.stochastic and self.temperature > 0.0
@@ -371,6 +436,7 @@ class Engine:
             self.decode_tokens += take
             self.spec_slot_steps += 1
             self.drafted_tokens += int(k_eff[slot])
+            self.verified_nodes += k + 1
             # acceptance counts the verifier's verdict, not the emission cap:
             # a request finishing mid-step still accepted n_acc draft tokens.
             self.accepted_tokens += int(n_acc[slot])
@@ -381,12 +447,78 @@ class Engine:
         self.last_token = jnp.asarray(new_last)
         self.cache = rollback_cache(cache, jnp.asarray(new_idx))
 
+    def _decode_spec_tree(self):
+        """One tree-speculative decode step: the drafter proposes a token
+        *tree* per slot (spec.tree.DraftTree, n_nodes flattened nodes), one
+        batched (B, n_nodes) verify pass runs the target over every node —
+        the Vec-LUT kernels see M = n_nodes parallel tokens per slot —
+        `accept_tree` keeps the longest accepted root-to-leaf path, the
+        winning path's cache entries are compacted back onto contiguous
+        slots (compact_tree_cache), and the idx rolls back to the accepted
+        depth. Greedy output is token-for-token plain decode."""
+        tree = self._tree
+        n_nodes = tree.n_nodes
+        contexts, pos = self._gather_contexts()
+        draft = np.asarray(
+            self.drafter.propose(contexts, self.spec.k, tree=tree), np.int32
+        )                                            # (B, n_nodes-1)
+        tokens = jnp.concatenate([self.last_token, jnp.asarray(draft)], axis=1)
+        with kernel_ops.dispatch_override(**self._mpgemm):
+            logits, cache = self._verify(self.params, self.cache, tokens)
+        self.rng, key = jax.random.split(self.rng)
+        n_acc, out, path = accept_tree(
+            tokens, logits, tree, key, temperature=self.temperature
+        )
+        n_acc, out, path = np.asarray(n_acc), np.asarray(out), np.asarray(path)
+        new_idx = pos + 1                            # free slots: arbitrary
+        take_arr = np.zeros(self.max_slots, np.int64)
+        new_last = np.asarray(self.last_token).copy()
+        now = time.perf_counter()
+        for slot, req in list(self.slot_req.items()):
+            if not self.active[slot]:
+                continue
+            remaining = req.max_new_tokens - len(req.generated)
+            take = min(int(n_acc[slot]) + 1, remaining)
+            req.generated.extend(int(t) for t in out[slot, :take])
+            new_last[slot, 0] = out[slot, take - 1]
+            new_idx[slot] = pos[slot] + take
+            take_arr[slot] = take
+            self.decode_tokens += take
+            self.spec_slot_steps += 1
+            # drafted counts the per-PATH budget (depth k, the most any
+            # step can accept), keeping acceptance_rate/mean_draft_k
+            # comparable with chain mode; the tree's node-level width is
+            # reported separately via verified_nodes / nodes_per_step
+            self.drafted_tokens += tree.k
+            # as in chain mode: acceptance counts the verifier's verdict,
+            # not the emission cap of a request finishing mid-step
+            self.accepted_tokens += int(n_acc[slot])
+            self.verified_nodes += n_nodes
+            if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
+                self._finish_slot(slot, req, now)
+        self.spec_steps += 1
+        self.last_token = jnp.asarray(new_last)
+        # window compaction: gather the winning path's nodes onto contiguous
+        # slots (depth d → slot pos+d) and invalidate the losers, so the
+        # rolled-back cache is indistinguishable from one that decoded the
+        # accepted tokens sequentially
+        sel = np.tile(np.arange(n_nodes, dtype=np.int64), (self.max_slots, 1))
+        sel[:, 1 : tree.k + 1] = np.where(
+            (np.arange(1, tree.k + 1)[None, :] <= n_acc[:, None]),
+            path[:, 1:],
+            sel[:, 1 : tree.k + 1],
+        )
+        self.cache = self._compact(
+            cache, jnp.asarray(pos), jnp.asarray(sel), jnp.asarray(take_arr)
+        )
+        self.cache = rollback_cache(self.cache, jnp.asarray(new_idx))
+
     def reset_stats(self):
         """Zero the token/acceptance counters (e.g. after a warmup run, so a
         timed run's stats exclude it). Slot/cache state is untouched."""
         self.prefill_tokens = self.decode_tokens = 0
         self.spec_steps = self.spec_slot_steps = self.spec_skipped_steps = 0
-        self.drafted_tokens = self.accepted_tokens = 0
+        self.drafted_tokens = self.accepted_tokens = self.verified_nodes = 0
 
     @property
     def n_active(self) -> int:
@@ -409,3 +541,7 @@ class Engine:
         return spec_mean_k(
             self.drafted_tokens, self.spec_slot_steps, self.spec_skipped_steps
         )
+
+    @property
+    def nodes_per_step(self) -> float:
+        return spec_nodes_per_step(self.verified_nodes, self.spec_slot_steps)

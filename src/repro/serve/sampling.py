@@ -1,6 +1,8 @@
 """Token sampling: greedy / temperature / top-k, plus the speculative-decoding
 acceptance rules (exact greedy matching and Leviathan-style rejection
-sampling over a verify step's (B, K+1, V) logits).
+sampling over a chain verify step's (B, K+1, V) logits, and `accept_tree` —
+longest accepted root-to-leaf path — over a tree verify step's flattened
+(B, N_nodes, V) logits).
 
 Both acceptance rules take an optional ``draft_mask`` so a batch can mix
 per-slot effective draft lengths: position j of row b is a *real* proposal
@@ -23,15 +25,24 @@ def sample(
     temperature: float = 0.0,
     top_k: int = 0,
 ) -> jax.Array:
-    """logits: (B, V) → (B,) int32."""
+    """logits: (B, V) → (B,) int32.
+
+    top_k keeps *exactly* top_k candidates (0 = unrestricted): ties at the
+    k-th logit are broken toward lower token ids (lax.top_k order), never
+    silently widening the kept set. top_k > V is clamped to V; top_k < 0 is
+    rejected."""
+    if top_k < 0:
+        raise ValueError(f"top_k must be >= 0, got {top_k}")
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     # top_k >= V keeps every token (and must not index out of bounds)
     top_k = min(top_k, logits.shape[-1])
     if top_k:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        _, idx = jax.lax.top_k(logits, top_k)
+        rows = jnp.arange(logits.shape[0])[:, None]
+        keep = jnp.zeros(logits.shape, bool).at[rows, idx].set(True)
+        logits = jnp.where(keep, logits, -1e30)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
 
 
@@ -145,3 +156,76 @@ def accept_speculative(
     mid = jnp.where(j < n_acc[:, None], draft, resample).astype(jnp.int32)
     out = jnp.concatenate([mid, bonus[:, None].astype(jnp.int32)], axis=1)
     return n_acc, out
+
+
+def accept_tree(
+    tokens: jax.Array,
+    target_logits: jax.Array,
+    tree,
+    rng: jax.Array,
+    *,
+    temperature: float = 0.0,
+):
+    """Acceptance rule over one *tree* verify step (multi-candidate drafts).
+
+    tokens: (B, N) node tokens in DraftTree flattening order (column 0 is
+    the root — the last sampled token); target_logits: (B, N, V) from
+    verify_step(..., tree=...), so position j conditions on exactly the
+    root-to-j path. → (n_acc (B,), out (B, K+1), path (B, K+1)):
+
+      n_acc  accepted draft nodes along the winning root-to-leaf path, in
+             [0, K] (K = tree depth).
+      out    emitted tokens: the winning path's accepted tokens in columns
+             0..n_acc-1, one correction/bonus token at column n_acc (the
+             caller emits out[:, :n_acc+1]); later columns repeat the
+             correction and carry no meaning.
+      path   the winning leaf's node index per depth (column 0 = root, i.e.
+             0) — the engine's cache-compaction gather map.
+
+    Greedy (temperature<=0): node j is accepted iff its token equals the
+    target argmax at its parent AND its whole ancestor chain is accepted;
+    the winner is the deepest accepted leaf path (ties resolve to the
+    lowest-rank — chain-proposal — branch). Since at most one token value
+    can match each parent's argmax, the emitted tokens are token-for-token
+    what sequential greedy decode would produce.
+
+    temperature>0 uses the same exact greedy path matching with the
+    correction token *sampled* at `temperature` from the last accepted
+    node's next-token distribution — every emitted token is a valid target
+    sample but the joint distribution is greedy-filtered, not the target's.
+    TODO(spec-tree): exact multi-candidate rejection sampling (SpecTr /
+    SpecInfer-style recursive residual transport across sibling candidates);
+    until it lands, SpecConfig refuses tree + stochastic and temperature>0
+    tree serving documents this approximation."""
+    b, n, v = target_logits.shape
+    parents = jnp.asarray(tree.parents, jnp.int32)                # (N,)
+    paths = jnp.asarray(tree.leaf_paths, jnp.int32)               # (L, K+1)
+    k = paths.shape[1] - 1
+    tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)    # (B, N)
+    # node-level greedy match: token j == the target's pick at j's parent
+    match = tokens == jnp.take_along_axis(
+        tgt, jnp.broadcast_to(parents[None, :], (b, n)), axis=1
+    )
+    match = match.at[:, 0].set(True)                              # root given
+    pm = match[:, paths]                                          # (B, L, K+1)
+    acc_len = (
+        jnp.sum(jnp.cumprod(pm.astype(jnp.int32), axis=-1), axis=-1) - 1
+    )                                                             # (B, L)
+    best = jnp.argmax(acc_len, axis=-1)                           # (B,)
+    n_acc = jnp.take_along_axis(acc_len, best[:, None], axis=1)[:, 0]
+    path = paths[best]                                            # (B, K+1)
+    path_tok = jnp.take_along_axis(tokens, path, axis=1)          # (B, K+1)
+    path_tgt = jnp.take_along_axis(tgt, path, axis=1)             # (B, K+1)
+    last = jnp.take_along_axis(path, n_acc[:, None], axis=1)      # (B, 1)
+    if temperature > 0.0:
+        corr_logits = jnp.take_along_axis(
+            target_logits, last[..., None], axis=1
+        )[:, 0]                                                   # (B, V)
+        corr = jax.random.categorical(rng, corr_logits / temperature, axis=-1)
+        corr = corr[:, None].astype(jnp.int32)
+    else:
+        corr = jnp.take_along_axis(path_tgt, n_acc[:, None], axis=1)
+    d = jnp.arange(k + 1, dtype=n_acc.dtype)[None, :]
+    nxt = jnp.concatenate([path_tok[:, 1:], path_tgt[:, -1:]], axis=1)
+    out = jnp.where(d < n_acc[:, None], nxt, corr).astype(jnp.int32)
+    return n_acc, out, path

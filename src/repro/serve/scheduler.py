@@ -17,8 +17,17 @@ from .engine import (
     Request,
     spec_acceptance_rate,
     spec_mean_k,
+    spec_nodes_per_step,
     spec_skip_rate,
     spec_tokens_per_step,
+)
+
+#: engine counters ServeStats mirrors; run_to_completion snapshots them so a
+#: scheduler reused across runs reports per-run deltas, not lifetime totals
+_ENGINE_COUNTERS = (
+    "prefill_tokens", "decode_tokens", "spec_steps", "spec_slot_steps",
+    "spec_skipped_steps", "drafted_tokens", "accepted_tokens",
+    "verified_nodes",
 )
 
 
@@ -36,6 +45,7 @@ class ServeStats:
     spec_skipped_steps: int = 0  # slot steps that skipped drafting (k_eff=0)
     drafted_tokens: int = 0
     accepted_tokens: int = 0
+    verified_nodes: int = 0     # candidate tokens verified (Σ per slot)
 
     @property
     def total_tokens(self) -> int:
@@ -62,6 +72,12 @@ class ServeStats:
         )
 
     @property
+    def nodes_per_step(self) -> float:
+        """Mean candidate tokens per slot verify row — the per-slot M the
+        Vec-LUT kernels see (k+1 chain, the tree node count under trees)."""
+        return spec_nodes_per_step(self.verified_nodes, self.spec_slot_steps)
+
+    @property
     def throughput_tok_s(self) -> float:
         return self.total_tokens / self.wall_s if self.wall_s else 0.0
 
@@ -80,6 +96,13 @@ class ContinuousBatchingScheduler:
         self.queue: deque[Request] = deque()
         self.completed: list[Request] = []  # finished requests, in finish order
         self.rejected: list[Request] = []   # failed admission (req.error set)
+        # high-water marks of what earlier run_to_completion calls already
+        # reported, so each run's ServeStats covers exactly the work since
+        # the last report (manual ticks included) and never re-counts it
+        self._reported = {k: getattr(engine, k) for k in _ENGINE_COUNTERS}
+        self._reported_done = 0
+        self._reported_rejected = 0
+        self._reported_ttft = 0
 
     def submit(self, reqs: Iterable[Request]):
         for r in reqs:
@@ -114,7 +137,20 @@ class ContinuousBatchingScheduler:
             self.completed.append(before[slot])
 
     def run_to_completion(self, max_ticks: int = 100_000) -> ServeStats:
+        """Drain the queue (≤ max_ticks); → ServeStats for this run.
+
+        Stats are per-run deltas against what earlier calls already
+        reported: tokens/completions/rejections/TTFTs from manual ticks
+        since the last report are included, but a reused scheduler/engine
+        can never re-count an earlier run's work against the new run's
+        wall clock (which used to inflate throughput and acceptance)."""
         t0 = time.perf_counter()
+        # tolerate an external engine.reset_stats() between runs: count
+        # from the reset point rather than going negative
+        base = {
+            k: min(self._reported[k], getattr(self.engine, k))
+            for k in _ENGINE_COUNTERS
+        }
         pending = lambda: self.queue or self.engine.n_active
         ticks = 0
         while pending() and ticks < max_ticks:
@@ -128,19 +164,25 @@ class ContinuousBatchingScheduler:
             + list(self.engine.slot_req.values())
             + list(self.queue)
         )
+        self._reported = {
+            k: getattr(self.engine, k) for k in _ENGINE_COUNTERS
+        }
+        done = sum(r.done for r in all_reqs)
+        # first-token latencies in event order, minus the already-reported
+        # prefix (the event times are monotone across ticks)
+        ttft_events = sorted(
+            (r.t_first_token, r.t_first_token - r.t_submit)
+            for r in all_reqs
+            if r.t_first_token
+        )
         stats = ServeStats(
             wall_s=wall,
-            prefill_tokens=self.engine.prefill_tokens,
-            decode_tokens=self.engine.decode_tokens,
-            completed=sum(r.done for r in all_reqs),
-            rejected=len(self.rejected),
-            ttft_s=[
-                r.t_first_token - r.t_submit for r in all_reqs if r.t_first_token
-            ],
-            spec_steps=self.engine.spec_steps,
-            spec_slot_steps=self.engine.spec_slot_steps,
-            spec_skipped_steps=self.engine.spec_skipped_steps,
-            drafted_tokens=self.engine.drafted_tokens,
-            accepted_tokens=self.engine.accepted_tokens,
+            completed=done - self._reported_done,
+            rejected=len(self.rejected) - self._reported_rejected,
+            ttft_s=[d for _, d in ttft_events[self._reported_ttft:]],
+            **{k: self._reported[k] - base[k] for k in _ENGINE_COUNTERS},
         )
+        self._reported_done = done
+        self._reported_rejected = len(self.rejected)
+        self._reported_ttft = len(ttft_events)
         return stats

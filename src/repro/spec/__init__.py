@@ -23,7 +23,17 @@ Components
                      (B, k+1) verify serves every mixture. `stochastic=True`
                      (drafter='model') samples proposals at the serving
                      temperature and threads the draft distributions into
-                     rejection sampling (`draft_probs`).
+                     rejection sampling (`draft_probs`). `tree=(b1, b2, ...)`
+                     switches to tree-structured multi-candidate
+                     verification: the drafter branches top-b_d candidates
+                     at each of the first depths and ONE flattened
+                     (B, n_nodes) verify pass scores the whole tree — the
+                     kernels see M = n_nodes > k+1 parallel tokens per slot
+                     (see `DraftTree` / `serve.sampling.accept_tree`).
+  * DraftTree      — the static flattened tree layout (`build_tree`): node
+                     order, per-node depth/rank, ancestor masks, and
+                     root-to-leaf paths shared by drafters, the tree verify
+                     masks, acceptance, and cache compaction.
   * NgramDrafter   — prompt-lookup / self-drafting: matches the context's
                      trailing n-gram against earlier context and proposes the
                      historical continuation. No extra weights.
@@ -47,5 +57,9 @@ engine construction.
 from .config import SpecConfig
 from .drafter import Drafter, NgramDrafter
 from .model_drafter import ModelDrafter
+from .tree import DraftTree, build_tree
 
-__all__ = ["SpecConfig", "Drafter", "NgramDrafter", "ModelDrafter"]
+__all__ = [
+    "SpecConfig", "Drafter", "NgramDrafter", "ModelDrafter",
+    "DraftTree", "build_tree",
+]

@@ -46,6 +46,24 @@ class SpecConfig:
                  exact target-model samples with the draft model's full
                  (not just argmax) probability mass counted toward
                  acceptance. With temperature<=0 drafting stays greedy.
+
+    Tree-structured verification (Medusa/SpecInfer-style):
+
+    tree         per-depth branching factors (b1, b2, ...) of a draft
+                 *tree* of depth k: the drafter proposes its top-b_d
+                 candidates at each of the first len(tree) depths (a chain
+                 continuation per leaf afterwards), the engine flattens the
+                 tree into ONE (B, n_nodes) verify pass — the Vec-LUT
+                 kernels see M = n_nodes parallel tokens per slot, well past
+                 the chain mode's M = k+1 — and acceptance keeps the longest
+                 accepted root-to-leaf path (see spec.tree.DraftTree for the
+                 flattening order and serve.sampling.accept_tree for the
+                 rule). None (the default) is chain mode, bit-identical to
+                 pre-tree behavior. Greedy tree output stays token-for-token
+                 identical to plain decode. tree is mutually exclusive with
+                 adaptive_k and stochastic (per-slot row padding and exact
+                 multi-candidate rejection sampling are chain-mode
+                 machinery; see accept_tree's TODO).
     """
     k: int = 4
     drafter: str = "ngram"
@@ -61,6 +79,8 @@ class SpecConfig:
     probe_every: int = 8
     # stochastic (sampled) ModelDrafter proposals
     stochastic: bool = False
+    # tree-structured multi-candidate verification
+    tree: tuple | None = None
 
     def __post_init__(self):
         if self.k < 1:
@@ -94,6 +114,24 @@ class SpecConfig:
                 "SpecConfig.stochastic needs drafter='model'; deterministic "
                 "drafters are already exact as one-hot proposals"
             )
+        if self.tree is not None:
+            if self.adaptive_k:
+                raise ValueError(
+                    "SpecConfig.tree is incompatible with adaptive_k: per-slot "
+                    "k_eff row padding is chain-mode machinery"
+                )
+            if self.stochastic:
+                raise ValueError(
+                    "SpecConfig.tree is incompatible with stochastic: exact "
+                    "multi-candidate rejection sampling is not implemented "
+                    "(accept_tree falls back to greedy path matching at "
+                    "temperature>0; see its TODO)"
+                )
+            self.tree = tuple(int(b) for b in self.tree)
+            # validates factors, depth <= k, and the flattened node cap
+            from .tree import build_tree
+
+            build_tree(self.k, self.tree)
 
     def k_policy(self, ewma: float, skip_streak: int = 0) -> int:
         """Effective draft length for a slot whose acceptance EWMA is `ewma`.
@@ -107,6 +145,14 @@ class SpecConfig:
         if ewma < self.skip_below:
             return self.k_min if skip_streak >= self.probe_every else 0
         return min(self.k, max(self.k_min, int(round(ewma * self.k))))
+
+    def tree_struct(self):
+        """The static DraftTree layout for `tree`, or None in chain mode."""
+        if self.tree is None:
+            return None
+        from .tree import build_tree
+
+        return build_tree(self.k, self.tree)
 
     def build(self, *, max_slots: int, max_len: int, mode: str = "serve"):
         """Instantiate the configured drafter for an engine's slot layout."""

@@ -29,16 +29,17 @@ class Drafter:
         rng=None,
         temperature: float = 0.0,
         return_probs: bool = False,
+        tree=None,
     ):
         """contexts: one entry per slot — the full token context (prompt +
         generated) as a 1-D int array for active slots, None for free slots.
         → (max_slots, k) int32 draft tokens (free-slot rows are ignored).
 
         slot_k: per-slot effective draft length in [0, k] (adaptive-K
-        engines). Columns >= slot_k[i] are padding the engine masks out of
-        acceptance — a drafter may fill them with anything valid and may
-        skip per-slot work for slot_k[i]==0 rows, but must keep the dense
-        (max_slots, k) shape.
+        engines, chain mode only). Columns >= slot_k[i] are padding the
+        engine masks out of acceptance — a drafter may fill them with
+        anything valid and may skip per-slot work for slot_k[i]==0 rows,
+        but must keep the dense (max_slots, k) shape.
 
         rng / temperature: stochastic drafters sample proposals at
         `temperature` using the JAX PRNG key `rng` (greedy when
@@ -47,7 +48,13 @@ class Drafter:
         return_probs: also return the per-position proposal distributions —
         `(draft, probs)` with probs (max_slots, k, V) float, or
         `(draft, None)` from a deterministic drafter (the engine then treats
-        the proposal as one-hot)."""
+        the proposal as one-hot).
+
+        tree: a spec.tree.DraftTree — propose a draft *tree* instead of a
+        chain: → (max_slots, tree.n_draft) int32 node tokens in the
+        DraftTree flattening order (column j-1 = node j; rank-0 children are
+        the drafter's best candidate, so the all-rank-0 path should be the
+        chain proposal). Mutually exclusive with slot_k/return_probs."""
         raise NotImplementedError
 
 
@@ -79,6 +86,50 @@ class NgramDrafter(Drafter):
                 return out
         return np.full(k, ctx[-1], ctx.dtype)
 
+    def _candidates(self, ctx: np.ndarray, c: int) -> np.ndarray:
+        """Top-c next-token candidates after `ctx`: the tokens that followed
+        earlier occurrences of the trailing n-gram, ranked by occurrence
+        count (recency breaks ties); padded with the best candidate (or the
+        fallback last token) when fewer than c distinct continuations
+        exist."""
+        L = len(ctx)
+        for n in range(min(self.max_n, L - 1), self.min_n - 1, -1):
+            suffix = ctx[L - n:]
+            windows = np.lib.stride_tricks.sliding_window_view(ctx, n)
+            starts = np.nonzero((windows == suffix).all(axis=1))[0]
+            starts = starts[starts < L - n]          # drop the suffix itself
+            if starts.size:
+                nxt = ctx[starts + n]
+                uniq, inv, counts = np.unique(
+                    nxt, return_inverse=True, return_counts=True
+                )
+                last_seen = np.zeros(len(uniq), np.int64)
+                last_seen[inv] = np.arange(len(nxt))  # most recent occurrence
+                order = np.lexsort((last_seen, counts))[::-1]
+                ranked = uniq[order]
+                out = np.full(c, ranked[0], ranked.dtype)
+                out[: min(c, len(ranked))] = ranked[:c]
+                return out
+        return np.full(c, ctx[-1], ctx.dtype)
+
+    def _propose_tree_one(self, ctx: np.ndarray, tree) -> np.ndarray:
+        """Fill one slot's draft tree: every node's children are the top-b
+        n-gram continuations of that node's *hypothesis* context (ctx + the
+        tokens along its root path), so each branch tracks its own history
+        rather than the chain's."""
+        out = np.zeros(tree.n_draft, np.int64)
+        hyp = {0: ctx}
+        cands: dict = {}
+        for j in range(1, tree.n_nodes):
+            p = int(tree.parents[j])
+            if p not in cands:
+                width = int(tree.branching[int(tree.depths[j]) - 1])
+                cands[p] = self._candidates(hyp[p], width)
+            tok = cands[p][int(tree.ranks[j])]
+            out[j - 1] = tok
+            hyp[j] = np.concatenate([hyp[p], [tok]])
+        return out
+
     def propose(
         self,
         contexts: list,
@@ -88,12 +139,18 @@ class NgramDrafter(Drafter):
         rng=None,
         temperature: float = 0.0,
         return_probs: bool = False,
+        tree=None,
     ):
-        out = np.zeros((len(contexts), k), np.int32)
+        width = tree.n_draft if tree is not None else k
+        out = np.zeros((len(contexts), width), np.int32)
         for i, ctx in enumerate(contexts):
             if ctx is None or (slot_k is not None and slot_k[i] == 0):
                 continue                    # free or skip-drafting slot
-            out[i] = self._propose_one(np.asarray(ctx, np.int64), k)
+            ctx = np.asarray(ctx, np.int64)
+            if tree is not None:
+                out[i] = self._propose_tree_one(ctx, tree)
+            else:
+                out[i] = self._propose_one(ctx, k)
         if return_probs:
             return out, None                # deterministic → one-hot proposal
         return out

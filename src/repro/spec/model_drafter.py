@@ -23,6 +23,12 @@ them as `draft_probs`, so temperature>0 serving still emits exact target-model
 samples while crediting the draft model's full probability mass toward
 acceptance (see sampling.accept_speculative; SpecConfig.stochastic wires this
 up). Passing the target's own params/config yields the always-accept oracle.
+
+`propose(..., tree=DraftTree)` proposes a token *tree* instead: the same
+single chain pass runs (resync + k-1 greedy decode steps — never a per-path
+loop), but each position keeps its top-b logits and the tree's depth-d
+candidates are the top-b_d tokens after d-1 argmax tokens (Medusa-style; the
+all-rank-0 path is exactly the chain proposal).
 """
 from __future__ import annotations
 
@@ -99,6 +105,41 @@ class ModelDrafter(Drafter):
             )
         return np.asarray(tok, np.int32), q
 
+    def _resync(self, contexts: list, window: int):
+        """Absorb the tokens the target accepted since the last call (one
+        multi-token verify over a (B, window) batch) and roll the cache back
+        to the synced boundary. Free slots are left completely alone — their
+        `synced` entry and cache rows are whatever the last occupant left
+        (admission rescatters both). → (last-real-position logits (B, V),
+        rolled-back cache)."""
+        b = self.max_slots
+        tokens = np.zeros((b, window), np.int32)
+        delta = np.ones(b, np.int64)
+        base = np.zeros(b, np.int64)
+        active = np.zeros(b, bool)
+        for i, ctx in enumerate(contexts):
+            if ctx is None:
+                continue
+            active[i] = True
+            base[i] = self.synced[i]
+            d = len(ctx) - self.synced[i]
+            assert 1 <= d <= window, (
+                f"slot {i}: draft cache out of sync ({d} unseen tokens, "
+                f"window {window}) — was on_admit called?"
+            )
+            delta[i] = d
+            tokens[i, :d] = ctx[self.synced[i]:]
+            tokens[i, d:] = ctx[-1]     # pad; rolled back below
+        logits, cache = self._verify(self.params, self.cache, jnp.asarray(tokens))
+        row = jnp.take_along_axis(
+            logits, jnp.asarray(delta - 1)[:, None, None], axis=1
+        )[:, 0]                                                # (B, V)
+        # keep only the real (accepted) tokens in the cache; free slots keep
+        # their stale synced value rather than being scribbled on
+        self.synced = np.where(active, base + delta, self.synced)
+        cache = rollback_cache(cache, jnp.asarray(self.synced))
+        return row, cache, active
+
     def propose(
         self,
         contexts: list,
@@ -108,51 +149,78 @@ class ModelDrafter(Drafter):
         rng=None,
         temperature: float = 0.0,
         return_probs: bool = False,
+        tree=None,
     ):
+        if tree is not None:
+            return self._propose_tree(contexts, tree)
         b = self.max_slots
-        pad = k + 1                     # max tokens a verify step can emit
-        tokens = np.zeros((b, pad), np.int32)
-        delta = np.ones(b, np.int64)
-        base = np.zeros(b, np.int64)
-        for i, ctx in enumerate(contexts):
-            if ctx is None:
-                continue
-            base[i] = self.synced[i]
-            d = len(ctx) - self.synced[i]
-            assert 1 <= d <= pad, (
-                f"slot {i}: draft cache out of sync ({d} unseen tokens, "
-                f"window {pad}) — was on_admit called?"
-            )
-            delta[i] = d
-            tokens[i, :d] = ctx[self.synced[i]:]
-            tokens[i, d:] = ctx[-1]     # pad; rolled back below
         stochastic = temperature > 0.0 and rng is not None
         keys = jax.random.split(rng, k) if stochastic else [None] * k
         # 1. resync: absorb the accepted tokens, one multi-token step
-        logits, cache = self._verify(self.params, self.cache, jnp.asarray(tokens))
+        #    (window k+1 = the most a chain verify step can emit)
+        row, cache, active = self._resync(contexts, k + 1)
         draft = np.zeros((b, k), np.int32)
         qs: list = []                   # per-position (B, V) device arrays
-        row = jnp.take_along_axis(
-            logits, jnp.asarray(delta - 1)[:, None, None], axis=1
-        )[:, 0]                                                # (B, V)
         draft[:, 0], q0 = self._pick(row, keys[0], temperature, return_probs)
         qs.append(q0)
-        # keep only the real (accepted) tokens in the cache
-        cache = rollback_cache(cache, jnp.asarray(base + delta))
-        self.synced = base + delta
-        # 2. draft: k-1 decode steps (positions continue per slot). slot_k
-        # rows needing fewer tokens still ride along — the step is batched
-        # and compile-once, and the engine masks their padded columns.
+        # 2. draft: decode steps (positions continue per slot), capped at
+        # the deepest k_eff any *active* slot asked for — a batch that only
+        # wants shallow drafts must not pay for k-1 steps. Padded columns
+        # (beyond a slot's k_eff, or beyond the cap) repeat the previous
+        # token; the engine's draft_mask keeps acceptance away from them.
+        k_hi = k if slot_k is None else int(
+            max((int(slot_k[i]) for i in range(b) if active[i]), default=0)
+        )
         last = jnp.asarray(draft[:, :1])
         for j in range(1, k):
-            step_logits, cache = self._decode(self.params, cache, last)
-            draft[:, j], qj = self._pick(
-                step_logits, keys[j], temperature, return_probs
-            )
+            if j < k_hi:
+                step_logits, cache = self._decode(self.params, cache, last)
+                draft[:, j], qj = self._pick(
+                    step_logits, keys[j], temperature, return_probs
+                )
+                last = jnp.asarray(draft[:, j : j + 1])
+            else:
+                draft[:, j] = draft[:, j - 1]
+                qj = (
+                    jax.nn.one_hot(
+                        jnp.asarray(draft[:, j]), self.cfg.vocab,
+                        dtype=jnp.float32,
+                    )
+                    if return_probs else None
+                )
             qs.append(qj)
-            last = jnp.asarray(draft[:, j : j + 1])
         # 3. rollback: drop the speculated draft state
         self.cache = rollback_cache(cache, jnp.asarray(self.synced))
         if return_probs:
             return draft, jnp.stack(qs, axis=1)      # (B, K, V), on device
         return draft
+
+    def _propose_tree(self, contexts: list, tree) -> np.ndarray:
+        """Medusa-style batched tree proposal: ONE greedy chain pass (the
+        same resync verify + k-1 decode steps chain mode runs — no per-path
+        decode loops), keeping each position's top-b tokens. The depth-d
+        candidates are the top-b_d tokens of the chain's logits after d-1
+        argmax tokens; rank 0 is the argmax itself, so the all-rank-0 path
+        is exactly the chain proposal. Children of non-argmax branches are
+        conditioned on the argmax prefix — the standard Medusa
+        approximation, traded for keeping drafting a single chain pass.
+        → (max_slots, tree.n_draft) int32 node tokens."""
+        b = self.max_slots
+        k = tree.k
+        row, cache, _ = self._resync(contexts, k + 1)
+        # per-depth top-b candidates off the greedy chain's logits
+        cand: list = []                  # cand[d-1]: (B, branching[d-1])
+        _, top = jax.lax.top_k(row, int(tree.branching[0]))
+        cand.append(np.asarray(top, np.int32))
+        last = jnp.asarray(cand[0][:, :1])          # argmax chain token
+        for d in range(2, k + 1):
+            step_logits, cache = self._decode(self.params, cache, last)
+            _, top = jax.lax.top_k(step_logits, int(tree.branching[d - 1]))
+            cand.append(np.asarray(top, np.int32))
+            last = jnp.asarray(cand[-1][:, :1])
+        self.cache = rollback_cache(cache, jnp.asarray(self.synced))
+        out = np.zeros((b, tree.n_draft), np.int32)
+        for j in range(1, tree.n_nodes):
+            d = int(tree.depths[j])
+            out[:, j - 1] = cand[d - 1][:, int(tree.ranks[j])]
+        return out

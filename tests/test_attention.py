@@ -1,4 +1,5 @@
-"""Attention: chunked == dense, windows, ring caches, MLA absorbed decode."""
+"""Attention: chunked == dense, windows, ring caches, MLA absorbed decode,
+tree-verify ancestor masks."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,7 +7,14 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.base import LayerSpec
-from repro.models.attention import attn_apply, attn_cache_init, sdpa
+from repro.models.attention import (
+    attn_apply,
+    attn_cache_init,
+    attn_init,
+    sdpa,
+    tree_step_gate,
+)
+from repro.spec import build_tree
 
 
 def _qkv(rng, b, s, h, kv, d):
@@ -25,6 +33,21 @@ class TestSdpa:
         dense = sdpa(q, k, v, pos, pos, causal=True, window=window, dense_max=9999)
         chunked = sdpa(q, k, v, pos, pos, causal=True, window=window,
                        chunk=16, dense_max=1)
+        np.testing.assert_allclose(
+            np.asarray(dense), np.asarray(chunked), rtol=2e-3, atol=2e-3
+        )
+
+    def test_chunked_equals_dense_with_extra_mask(self, rng):
+        """The tree gate rides sdpa's extra_mask — the chunked online-softmax
+        path must apply it identically to the dense path."""
+        b, s, h, kv, d = 1, 64, 2, 2, 4
+        q, k, v, pos = _qkv(rng, b, s, h, kv, d)
+        em = jnp.asarray(rng.random((b, s, s)) < 0.7)
+        em = em | jnp.eye(s, dtype=bool)[None]     # keep self visible
+        dense = sdpa(q, k, v, pos, pos, causal=True, dense_max=9999,
+                     extra_mask=em)
+        chunked = sdpa(q, k, v, pos, pos, causal=True, chunk=16, dense_max=1,
+                       extra_mask=em)
         np.testing.assert_allclose(
             np.asarray(dense), np.asarray(chunked), rtol=2e-3, atol=2e-3
         )
@@ -96,6 +119,75 @@ class TestRingCache:
                 steps.append(np.asarray(y))
             outs[max_len] = np.concatenate(steps, axis=1)
         np.testing.assert_allclose(outs[16], outs[64], rtol=2e-4, atol=2e-4)
+
+
+class TestTreeVerify:
+    """Tree-structured verify: the S incoming tokens are a flattened draft
+    tree — each node must attend the cached prefix plus its tree *ancestors*
+    only (per-node positions = node depth)."""
+
+    def test_tree_step_gate_window_values(self):
+        t = build_tree(2, (2,))           # 5 nodes; parents [0,0,0,1,2]
+        start = jnp.asarray([3], jnp.int32)
+        gate = np.asarray(tree_step_gate(t, start, t.n_nodes, 12))[0]
+        assert gate.shape == (5, 12)
+        # outside the slot window [3, 8): always True
+        assert gate[:, :3].all() and gate[:, 8:].all()
+        # inside: exactly the ancestor matrix (self included)
+        np.testing.assert_array_equal(gate[:, 3:8], t.ancestors)
+
+    def test_node_outputs_match_per_path_chain_verify(self, rng):
+        """Every tree node's attention output must equal what a plain chain
+        verify over that node's root-to-leaf path produces — ancestor-only
+        masking, sibling isolation, and depth positions all at once."""
+        cfg = get_config("smollm-360m", smoke=True)
+        spec = LayerSpec(rope_theta=10_000.0)
+        p = attn_init(jax.random.PRNGKey(0), cfg, spec)
+        tree = build_tree(3, (2,))        # 7 nodes, 2 leaves
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+        cache = attn_cache_init(cfg, spec, 2, 24, jnp.float32)
+        _, cache = attn_apply(p, x, cfg=cfg, spec=spec, mode="eval", cache=cache)
+        xt = jax.random.normal(
+            jax.random.PRNGKey(2), (2, tree.n_nodes, cfg.d_model)
+        )
+        out_tree, _ = attn_apply(
+            p, xt, cfg=cfg, spec=spec, mode="eval", cache=cache,
+            verify=True, tree=tree,
+        )
+        for path in tree.leaf_paths:
+            out_chain, _ = attn_apply(
+                p, xt[:, path], cfg=cfg, spec=spec, mode="eval", cache=cache,
+                verify=True,
+            )
+            np.testing.assert_allclose(
+                np.asarray(out_tree[:, path]), np.asarray(out_chain),
+                rtol=2e-4, atol=2e-4,
+            )
+
+    def test_sibling_content_cannot_leak(self, rng):
+        """Changing one branch's activations must not change the other
+        branch's outputs (the exact bug a shared cache slot would cause)."""
+        cfg = get_config("smollm-360m", smoke=True)
+        spec = LayerSpec(rope_theta=10_000.0)
+        p = attn_init(jax.random.PRNGKey(0), cfg, spec)
+        tree = build_tree(2, (2,))        # nodes 0; 1,2; 3(=c(1)), 4(=c(2))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, cfg.d_model))
+        cache = attn_cache_init(cfg, spec, 1, 16, jnp.float32)
+        _, cache = attn_apply(p, x, cfg=cfg, spec=spec, mode="eval", cache=cache)
+        xt = jax.random.normal(
+            jax.random.PRNGKey(2), (1, tree.n_nodes, cfg.d_model)
+        )
+        out1, _ = attn_apply(p, xt, cfg=cfg, spec=spec, mode="eval",
+                             cache=cache, verify=True, tree=tree)
+        # perturb branch 2 (nodes 2 and 4); branch 1 (nodes 1, 3) + root stay
+        xt2 = xt.at[:, 2].add(5.0).at[:, 4].add(-3.0)
+        out2, _ = attn_apply(p, xt2, cfg=cfg, spec=spec, mode="eval",
+                             cache=cache, verify=True, tree=tree)
+        np.testing.assert_array_equal(
+            np.asarray(out1[:, [0, 1, 3]]), np.asarray(out2[:, [0, 1, 3]])
+        )
+        assert np.abs(np.asarray(out1[:, [2, 4]]) -
+                      np.asarray(out2[:, [2, 4]])).max() > 0
 
 
 class TestMLA:

@@ -295,6 +295,75 @@ class TestSampleTopK:
             np.asarray(toks), np.asarray(jnp.argmax(logits, axis=-1))
         )
 
+    def test_top_k_keeps_exactly_k_on_ties(self):
+        """Regression: `logits < kth` kept every tie of the k-th logit, so
+        three tied logits survived top_k=2 and token 2 could be emitted.
+        Exactly top_k candidates must survive (ties break toward lower
+        token ids)."""
+        import jax.numpy as jnp
+
+        from repro.serve import sample
+
+        logits = jnp.asarray([[1.0, 1.0, 1.0, 0.0, 0.0, 0.0]])
+        seen = {
+            int(sample(logits, jax.random.PRNGKey(s), temperature=1.0,
+                       top_k=2)[0])
+            for s in range(64)
+        }
+        assert seen == {0, 1}
+
+    def test_negative_top_k_raises(self, rng):
+        """Regression: top_k=-1 was silently accepted (min(-1, V) = -1 then
+        `sort[:, 1]` — a nonsense threshold)."""
+        import jax.numpy as jnp
+
+        from repro.serve import sample
+
+        logits = jnp.asarray(rng.normal(size=(2, 8)), jnp.float32)
+        with pytest.raises(ValueError, match="top_k"):
+            sample(logits, jax.random.PRNGKey(0), temperature=1.0, top_k=-1)
+
+
+@pytest.mark.slow
+class TestSchedulerRunIsolation:
+    def test_second_run_reports_only_its_own_work(self, served, rng):
+        """Regression: run_to_completion accumulated — a second call
+        re-counted the first run's completions and tokens against only the
+        new wall clock, inflating throughput and acceptance."""
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=2, max_len=64)
+        sched = ContinuousBatchingScheduler(eng)
+        prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+        sched.submit([Request(rid=0, prompt=prompt.copy(), max_new_tokens=5)])
+        s1 = sched.run_to_completion()
+        sched.submit([Request(rid=1, prompt=prompt.copy(), max_new_tokens=5)])
+        s2 = sched.run_to_completion()
+        # identical workloads → identical per-run deltas, not 2x totals
+        assert s1.completed == s2.completed == 1
+        assert s2.decode_tokens == s1.decode_tokens > 0
+        assert s2.prefill_tokens == s1.prefill_tokens > 0
+        assert len(s1.ttft_s) == len(s2.ttft_s) == 1
+
+    def test_second_run_spec_counters_are_deltas(self, served, rng):
+        from repro.spec import SpecConfig
+
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=1, max_len=64,
+                     spec=SpecConfig(k=2, drafter="ngram"))
+        sched = ContinuousBatchingScheduler(eng)
+        prompt = np.tile([9, 4], 6).astype(np.int32)
+        sched.submit([Request(rid=0, prompt=prompt.copy(), max_new_tokens=6)])
+        s1 = sched.run_to_completion()
+        sched.submit([Request(rid=1, prompt=prompt.copy(), max_new_tokens=6)])
+        s2 = sched.run_to_completion()
+        assert s1.spec_steps == s2.spec_steps > 0
+        assert s1.drafted_tokens == s2.drafted_tokens > 0
+        assert s1.accepted_tokens == s2.accepted_tokens
+        assert s1.verified_nodes == s2.verified_nodes > 0
+        # derived rates survive the reuse unchanged
+        assert s1.acceptance_rate == s2.acceptance_rate
+        assert s1.decode_tokens_per_step == s2.decode_tokens_per_step
+
 
 @pytest.mark.slow
 def test_temperature_sampling_varies(served, rng):

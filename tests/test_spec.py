@@ -7,6 +7,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import (
+    compact_tree_cache,
     decode_step,
     init_cache,
     init_lm,
@@ -20,9 +21,16 @@ from repro.serve import (
     Engine,
     Request,
     accept_speculative,
+    accept_tree,
     greedy_accept,
 )
-from repro.spec import Drafter, ModelDrafter, NgramDrafter, SpecConfig
+from repro.spec import (
+    Drafter,
+    ModelDrafter,
+    NgramDrafter,
+    SpecConfig,
+    build_tree,
+)
 
 
 @pytest.fixture(scope="module")
@@ -220,6 +228,134 @@ class TestAcceptance:
 
 
 # --------------------------------------------------------------------------
+# Draft trees (pure structure + acceptance, no model)
+# --------------------------------------------------------------------------
+class TestDraftTree:
+    def test_structure_chain_after_branching(self):
+        t = build_tree(4, (2, 2))
+        # 1 root + 2 + 4 + 4 + 4: depths past len(tree) chain per leaf
+        assert t.n_nodes == 15 and t.n_draft == 14
+        assert t.branching == (2, 2, 1, 1)
+        np.testing.assert_array_equal(np.bincount(t.depths), [1, 2, 4, 4, 4])
+        assert t.leaf_paths.shape == (4, 5)
+        # every path starts at the root and descends parent→child
+        for path in t.leaf_paths:
+            assert path[0] == 0
+            for d in range(1, 5):
+                assert t.parents[path[d]] == path[d - 1]
+
+    def test_ancestor_matrix(self):
+        t = build_tree(2, (2,))
+        # nodes: 0 root; 1,2 depth-1; 3=chain(1), 4=chain(2)
+        np.testing.assert_array_equal(t.parents, [0, 0, 0, 1, 2])
+        assert t.ancestors[3].tolist() == [True, True, False, True, False]
+        assert t.ancestors[4].tolist() == [True, False, True, False, True]
+        assert t.ancestors[0].tolist() == [True, False, False, False, False]
+
+    def test_rank0_path_is_the_chain(self):
+        t = build_tree(3, (3, 2))
+        # the all-rank-0 leaf is leaf 0 by flattening order
+        path = t.leaf_paths[0]
+        assert all(t.ranks[n] == 0 for n in path)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="at most k deep"):
+            build_tree(2, (2, 2, 2))
+        with pytest.raises(ValueError, match=">= 1"):
+            build_tree(2, (0,))
+        with pytest.raises(ValueError, match="nodes"):
+            build_tree(4, (8, 8, 8))
+        with pytest.raises(ValueError, match="adaptive_k"):
+            SpecConfig(k=2, tree=(2,), adaptive_k=True)
+        with pytest.raises(ValueError, match="stochastic"):
+            SpecConfig(k=2, tree=(2,), drafter="model", stochastic=True,
+                       draft_params={}, draft_cfg={})
+        with pytest.raises(ValueError, match="at most k deep"):
+            SpecConfig(k=1, tree=(2, 2))
+        assert SpecConfig(k=3, tree=(2,)).tree_struct().n_nodes == 7
+        assert SpecConfig(k=3).tree_struct() is None
+
+
+class TestAcceptTree:
+    def _onehot_logits(self, picks, v=16):
+        """(B, N, V) logits whose argmax at node j is picks[b][j]."""
+        oh = jax.nn.one_hot(jnp.asarray(picks), v)
+        return jnp.log(oh * (1 - 1e-6) + 1e-9)
+
+    def test_longest_path_wins(self):
+        t = build_tree(2, (2,))           # paths [0,1,3] and [0,2,4]
+        tokens = jnp.asarray([[5, 7, 9, 7, 8]], jnp.int32)
+        # target picks: after root → 9 (rejects node 1, accepts node 2),
+        # after node 2 → 8 (accepts node 4), after node 4 → 3 (correction)
+        logits = self._onehot_logits([[9, 0, 8, 0, 3]])
+        n_acc, out, path = accept_tree(tokens, logits, t, jax.random.PRNGKey(0))
+        assert int(n_acc[0]) == 2
+        np.testing.assert_array_equal(np.asarray(out[0]), [9, 8, 3])
+        np.testing.assert_array_equal(np.asarray(path[0]), [0, 2, 4])
+
+    def test_no_match_emits_correction_only(self):
+        t = build_tree(2, (2,))
+        tokens = jnp.asarray([[5, 7, 9, 7, 8]], jnp.int32)
+        logits = self._onehot_logits([[1, 0, 0, 0, 0]])   # root pick misses all
+        n_acc, out, _ = accept_tree(tokens, logits, t, jax.random.PRNGKey(0))
+        assert int(n_acc[0]) == 0
+        assert int(out[0, 0]) == 1        # the target's own pick
+
+    def test_tie_resolves_to_lowest_rank_branch(self):
+        t = build_tree(2, (2,))
+        # both depth-1 siblings carry the accepted token 7; deeper nodes miss
+        tokens = jnp.asarray([[5, 7, 7, 1, 2]], jnp.int32)
+        logits = self._onehot_logits([[7, 9, 9, 0, 0]])
+        n_acc, out, path = accept_tree(tokens, logits, t, jax.random.PRNGKey(0))
+        assert int(n_acc[0]) == 1
+        np.testing.assert_array_equal(np.asarray(path[0]), [0, 1, 3])
+        np.testing.assert_array_equal(np.asarray(out[0, :2]), [7, 9])
+
+    def test_temperature_correction_sampled_from_last_accepted_node(self):
+        # greedy path matching at temperature>0, correction sampled from the
+        # last accepted node's next-token distribution (here a point mass)
+        t = build_tree(1, (2,))           # root + 2 leaves
+        tokens = jnp.asarray([[5, 7, 9]], jnp.int32)
+        logits = self._onehot_logits([[9, 0, 4]])
+        for seed in range(8):
+            n_acc, out, _ = accept_tree(
+                tokens, logits, t, jax.random.PRNGKey(seed), temperature=1.0
+            )
+            assert int(n_acc[0]) == 1
+            np.testing.assert_array_equal(np.asarray(out[0]), [9, 4])
+
+
+class TestCompactTreeCache:
+    def test_moves_path_entries_and_invalidates_losers(self):
+        """Window slots d < take must receive the accepted path node's entry
+        (slot == position restored); later window slots keep content but get
+        slot_pos = -1 so a stale sibling's small position can never satisfy
+        a future query's position mask."""
+        b, L, n = 2, 12, 5
+        line = np.tile(np.arange(L, dtype=np.float32)[None, None, :], (1, b, 1))
+        cache = {
+            "k": jnp.asarray(line[..., None, None]),          # (1, B, L, 1, 1)
+            "slot_pos": jnp.asarray(line[0].astype(np.int32)[None]),
+            "idx": jnp.zeros((1, b), jnp.int32),
+        }
+        pos = jnp.asarray([3, 0])
+        # row 0: accepted path nodes 2 (depth 1) and 4 (depth 2), take=3;
+        # row 1: nothing accepted beyond the root, take=1
+        sel = jnp.asarray([[0, 2, 4, 3, 4], [0, 1, 2, 3, 4]])
+        take = jnp.asarray([3, 1])
+        out = compact_tree_cache(cache, pos, sel, take)
+        k0 = np.asarray(out["k"])[0, 0, :, 0, 0]
+        np.testing.assert_array_equal(k0[:3], [0, 1, 2])      # prefix intact
+        np.testing.assert_array_equal(k0[3:8], [3, 5, 7, 6, 7])
+        sp0 = np.asarray(out["slot_pos"])[0, 0]
+        np.testing.assert_array_equal(sp0[3:8], [3, 4, 5, -1, -1])
+        sp1 = np.asarray(out["slot_pos"])[0, 1]
+        np.testing.assert_array_equal(sp1[:5], [0, -1, -1, -1, -1])
+        np.testing.assert_array_equal(sp1[5:], np.arange(5, L))
+        np.testing.assert_array_equal(np.asarray(out["idx"]), 0)  # rollback's
+
+
+# --------------------------------------------------------------------------
 # Adaptive-K policy (pure config logic, no model)
 # --------------------------------------------------------------------------
 class TestKPolicy:
@@ -262,6 +398,34 @@ class TestKPolicy:
         np.testing.assert_array_equal(out[1], [7, 7])
         draft, probs = d.propose([np.array([4, 4])], 2, return_probs=True)
         assert probs is None                             # deterministic
+
+
+class TestNgramTreeProposal:
+    def test_branches_are_distinct_continuations(self):
+        d = NgramDrafter(max_n=1, min_n=1)
+        # token 5 was followed by 8 (twice) and by 3 (once, most recent)
+        ctx = np.array([5, 8, 5, 8, 5, 3, 5])
+        t = build_tree(2, (2,))
+        out = d.propose([ctx], 2, tree=t)[0]
+        # depth-1 candidates: 8 (count 2) ranked above 3 (count 1)
+        assert out[0] == 8 and out[1] == 3
+        # chain continuations track each branch's own hypothesis: after
+        # [... 5, 8] the bigram fallback sees 8 → 5; after [... 5, 3] 3 → 5
+        assert out.shape == (t.n_draft,)
+
+    def test_fewer_matches_than_branches_pads(self):
+        d = NgramDrafter(max_n=1, min_n=1)
+        ctx = np.array([5, 8, 5])                        # one continuation
+        t = build_tree(1, (3,))
+        out = d.propose([ctx], 1, tree=t)[0]
+        np.testing.assert_array_equal(out, [8, 8, 8])    # padded with best
+
+    def test_free_slots_skipped(self):
+        d = NgramDrafter()
+        t = build_tree(2, (2,))
+        out = d.propose([None, np.array([4, 4, 4])], 2, tree=t)
+        assert out.shape == (2, t.n_draft)
+        np.testing.assert_array_equal(out[0], 0)
 
 
 # --------------------------------------------------------------------------
@@ -531,6 +695,140 @@ class TestSpecEngine:
         assert stats.spec_skipped_steps == eng.spec_skipped_steps == 0
         assert stats.skip_rate == eng.skip_rate == 0.0
         assert stats.mean_draft_k == eng.mean_draft_k == 2.0
+
+
+@pytest.mark.slow
+class TestTreeSpecEngine:
+    """Tree-structured multi-candidate verification: greedy output must be
+    token-identical to plain decode, chain mode must be untouched, and the
+    verify pass must carry tree-many nodes per slot step."""
+
+    def _mixed_prompts(self, cfg, rng, n=4):
+        """Half repetitive (n-gram tree drafting feeds), half random."""
+        pat = rng.integers(0, cfg.vocab, size=3)
+        warm = [np.tile(pat, 5).astype(np.int32) for _ in range(n - n // 2)]
+        cold = [rng.integers(0, cfg.vocab, size=rng.integers(4, 16)).astype(np.int32)
+                for _ in range(n // 2)]
+        return warm + cold
+
+    def test_greedy_tree_exactness_mixed_batch(self, served, rng):
+        """Acceptance criterion: greedy tree-speculative serving emits
+        token-for-token the plain-decode output on a mixed warm/cold batch,
+        while each slot's verify row carries n_nodes > k+1 candidates."""
+        cfg, params = served
+        prompts = self._mixed_prompts(cfg, rng)
+        base, _, _ = _run_engine(cfg, params, prompts, max_new=10)
+        spec = SpecConfig(k=4, drafter="ngram", tree=(2, 2))
+        treed, stats, eng = _run_engine(cfg, params, prompts, spec=spec,
+                                        max_new=10)
+        assert base == treed
+        n_nodes = spec.tree_struct().n_nodes
+        assert n_nodes > spec.k + 1
+        assert eng.nodes_per_step == stats.nodes_per_step == n_nodes
+        assert eng.spec_steps > 0 and eng.verified_nodes > 0
+
+    def test_greedy_tree_exactness_model_drafter(self, served, rng):
+        cfg, params = served
+        prompts = [rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+                   for _ in range(2)]
+        base, _, _ = _run_engine(cfg, params, prompts)
+        spec = SpecConfig(k=3, drafter="model", tree=(2,),
+                          draft_params=params, draft_cfg=cfg)
+        treed, _, eng = _run_engine(cfg, params, prompts, spec=spec)
+        assert base == treed
+        # the rank-0 path is the self-draft argmax chain → fully accepted
+        # whenever a step isn't capped by max_new_tokens
+        assert eng.decode_tokens_per_step > 1.0
+
+    def test_greedy_tree_exactness_mla(self, rng):
+        """The absorbed-latent MLA verify path under tree masks + window
+        compaction must stay exact too."""
+        cfg = get_config("deepseek-v3-671b", smoke=True)
+        params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+        prompts = [np.tile([7, 3, 9], 4).astype(np.int32),
+                   rng.integers(0, cfg.vocab, size=8).astype(np.int32)]
+        base, _, _ = _run_engine(cfg, params, prompts)
+        treed, _, _ = _run_engine(
+            cfg, params, prompts, spec=SpecConfig(k=3, drafter="ngram", tree=(2, 2))
+        )
+        assert base == treed
+
+    def test_chain_mode_is_unchanged(self, served, rng):
+        """tree=None must run the pre-tree chain path: same output as plain
+        decode, k+1 verified nodes per slot step, no tree state."""
+        cfg, params = served
+        prompts = self._mixed_prompts(cfg, rng)
+        base, _, _ = _run_engine(cfg, params, prompts)
+        chain, _, eng = _run_engine(cfg, params, prompts,
+                                    spec=SpecConfig(k=3, drafter="ngram"))
+        assert base == chain
+        assert eng._tree is None
+        assert eng.nodes_per_step == eng.spec.k + 1
+
+    def test_tree_temperature_serving_completes(self, served, rng):
+        """temperature>0 tree serving (greedy path matching + sampled
+        correction — see accept_tree's TODO) warns about the approximation,
+        emits valid tokens, and completes."""
+        cfg, params = served
+        prompts = [rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+                   for _ in range(2)]
+        with pytest.warns(UserWarning, match="greedy-filtered"):
+            out, stats, _ = _run_engine(
+                cfg, params, prompts, spec=SpecConfig(k=2, tree=(2,)),
+                temperature=1.0, seed=5,
+            )
+        assert stats.completed == 2
+        assert all(len(g) == 8 for g in out)
+        assert all(0 <= t < cfg.vocab for g in out for t in g)
+
+    def test_tree_draft_window_budget(self, served, rng):
+        """Admission must budget the tree's slot window (n_nodes-1 slots
+        past the root), not just k."""
+        cfg, params = served
+        spec = SpecConfig(k=4, drafter="ngram", tree=(2, 2))   # 15 nodes
+        eng = Engine(params, cfg, max_slots=1, max_len=32, spec=spec)
+        assert eng._draft_window == 14
+        prompt = rng.integers(0, cfg.vocab, size=10).astype(np.int32)
+        with pytest.raises(ValueError, match="draft window"):
+            eng.add(Request(rid=0, prompt=prompt, max_new_tokens=10))
+
+
+@pytest.mark.slow
+class TestModelDrafterSlotK:
+    def test_decode_loop_capped_and_free_slots_untouched(self, served):
+        """Regression: propose() used to run all k-1 draft decode steps even
+        when every active slot's k_eff was smaller, and scribbled
+        synced[free]=1 on free slots."""
+        cfg, params = served
+        d = ModelDrafter(params, cfg, max_slots=2, max_len=32)
+        prompt = (np.arange(5) + 7).astype(np.int32)
+        d.on_admit(0, prompt)
+        assert int(d.synced[1]) == 0                    # free slot, untouched
+        calls = []
+        real_decode = d._decode
+        d._decode = lambda *a: (calls.append(1), real_decode(*a))[1]
+        k = 4
+        ctx = np.concatenate([prompt, [3]]).astype(np.int32)
+        out = d.propose([ctx, None], k, slot_k=np.array([2, 0]))
+        assert out.shape == (2, k)
+        # deepest active k_eff = 2 → exactly 1 decode step (not k-1 = 3)
+        assert len(calls) == 1
+        # free slot's synced must never be written
+        assert int(d.synced[1]) == 0
+        assert int(d.synced[0]) == 6
+
+    def test_all_slots_skipping_runs_no_decode_steps(self, served):
+        cfg, params = served
+        d = ModelDrafter(params, cfg, max_slots=1, max_len=32)
+        prompt = (np.arange(5) + 7).astype(np.int32)
+        d.on_admit(0, prompt)
+        calls = []
+        real_decode = d._decode
+        d._decode = lambda *a: (calls.append(1), real_decode(*a))[1]
+        ctx = np.concatenate([prompt, [3]]).astype(np.int32)
+        out = d.propose([ctx], 3, slot_k=np.array([0]))
+        assert out.shape == (1, 3)
+        assert len(calls) == 0              # nothing to draft anywhere
 
 
 @pytest.mark.slow
