@@ -5,11 +5,16 @@
      total/prefill/decode tok/s and median TTFT — the paper's 273.5 tok/s
      experiment shape;
 (iii) the same workload under speculative decoding (n-gram drafter),
-     reporting tokens/step and acceptance rate.
+     reporting tokens/step and acceptance rate;
+(iv) a mixed long-prompt/decode arm: the same queued-request stream served
+     by whole-prompt admission prefill vs chunked prefill (mixed
+     prefill/decode batched steps) — the chunked rows report the median
+     TTFT improvement for queued requests at equal total throughput.
 
 All rows land in BENCH_decode.json via benchmarks.common (parity with
 gemm_bench), with tokens/s, TTFT, and acceptance-rate columns machine-
-readable in `extra` fields.
+readable in `extra` fields. Runs that record no TTFT events emit
+`ttft_median_ms: null` (never a fake 0) and omit the console column.
 """
 from __future__ import annotations
 
@@ -37,13 +42,19 @@ def _mixed_requests(rng, cfg, n_req):
     ]
 
 
+def _ttft_ms(stats):
+    """Median TTFT in ms, or None when the run recorded no TTFT events."""
+    return 1e3 * float(np.median(stats.ttft_s)) if stats.ttft_s else None
+
+
 def _serve_run(params, cfg, reqs, *, spec=None, slots=4, max_len=96,
-               temperature=0.0, seed=0):
+               temperature=0.0, seed=0, prefill_chunk=0, token_budget=0):
     # Warm THE SAME engine with a throwaway request: each Engine owns its own
     # jax.jit closures, so warming a separate instance leaves the timed one
     # to re-trace/re-compile inside the measured region (~150x on first add).
     eng = Engine(params, cfg, max_slots=slots, max_len=max_len, spec=spec,
-                 temperature=temperature, seed=seed)
+                 temperature=temperature, seed=seed,
+                 prefill_chunk=prefill_chunk, token_budget=token_budget)
     warm = ContinuousBatchingScheduler(eng)
     warm.submit([Request(rid=-1, prompt=reqs[0].prompt.copy(), max_new_tokens=2)])
     warm.run_to_completion()
@@ -84,12 +95,13 @@ def run(quick: bool = True):
         ]
 
     stats = _serve_run(params, cfg, fresh())
-    ttft_ms = 1e3 * float(np.median(stats.ttft_s)) if stats.ttft_s else 0.0
+    ttft_ms = _ttft_ms(stats)
+    ttft_col = f"ttft {ttft_ms:.0f}ms " if ttft_ms is not None else ""
     emit(
         "continuous_batching/total", stats.wall_s,
         f"{stats.throughput_tok_s:.1f} tok/s "
         f"(prefill {stats.prefill_tok_s:.1f} decode {stats.decode_tok_s:.1f}) "
-        f"ttft {ttft_ms:.0f}ms completed {stats.completed}/{n_req}",
+        f"{ttft_col}completed {stats.completed}/{n_req}",
         tok_s=stats.throughput_tok_s,
         prefill_tok_s=stats.prefill_tok_s,
         decode_tok_s=stats.decode_tok_s,
@@ -99,9 +111,6 @@ def run(quick: bool = True):
 
     # ---- speculative continuous batching: same workload, spec on ----------
     spec_stats = _serve_run(params, cfg, fresh(), spec=SpecConfig(k=4))
-    spec_ttft = (
-        1e3 * float(np.median(spec_stats.ttft_s)) if spec_stats.ttft_s else 0.0
-    )
     emit(
         "continuous_batching/spec_k4", spec_stats.wall_s,
         f"{spec_stats.throughput_tok_s:.1f} tok/s "
@@ -110,11 +119,65 @@ def run(quick: bool = True):
         f"completed {spec_stats.completed}/{n_req}",
         tok_s=spec_stats.throughput_tok_s,
         decode_tok_s=spec_stats.decode_tok_s,
-        ttft_median_ms=spec_ttft,
+        ttft_median_ms=_ttft_ms(spec_stats),
         acceptance_rate=spec_stats.acceptance_rate,
         tokens_per_step=spec_stats.decode_tokens_per_step,
         completed=spec_stats.completed,
     )
+
+    # ---- mixed long-prompt/decode: whole-prompt vs chunked prefill --------
+    # Long prompts queued behind a full engine: whole-prompt admission runs
+    # each prompt as one blocking B=1 pass per tick while every decode slot
+    # stalls; chunked prefill batches all prefilling slots' chunks and the
+    # decode rows into ONE mixed step per tick. Median TTFT over the queued
+    # requests is the headline (same total work either way).
+    long_len = 64 if quick else 96
+    n_long = 8 if quick else 16
+    slots, max_len = 4, 2 * long_len
+
+    def long_reqs():
+        r = np.random.default_rng(7)    # same stream for both arms
+        return [
+            Request(
+                rid=i,
+                prompt=r.integers(0, cfg.vocab, size=long_len).astype(np.int32),
+                max_new_tokens=16,
+            )
+            for i in range(n_long)
+        ]
+
+    whole = _serve_run(params, cfg, long_reqs(), slots=slots, max_len=max_len)
+    chunked = _serve_run(
+        params, cfg, long_reqs(), slots=slots, max_len=max_len,
+        prefill_chunk=32,
+    )
+    for name, s in (("whole_prompt", whole), ("chunked_prefill", chunked)):
+        t = _ttft_ms(s)
+        tc = f"ttft {t:.0f}ms " if t is not None else ""
+        emit(
+            f"mixed_long_prompt/{name}", s.wall_s,
+            f"{s.throughput_tok_s:.1f} tok/s "
+            f"(prefill {s.prefill_tok_s:.1f} decode {s.decode_tok_s:.1f}) "
+            f"{tc}pad {s.prefill_pad_tokens} "
+            f"completed {s.completed}/{n_long}",
+            tok_s=s.throughput_tok_s,
+            prefill_tok_s=s.prefill_tok_s,
+            decode_tok_s=s.decode_tok_s,
+            ttft_median_ms=t,
+            prefill_pad_tokens=s.prefill_pad_tokens,
+            chunk_steps=s.chunk_steps,
+            completed=s.completed,
+        )
+    wt, ct = _ttft_ms(whole), _ttft_ms(chunked)
+    if wt and ct:
+        emit(
+            "mixed_long_prompt/ttft_speedup", 0.0, f"{wt / ct:.2f}x",
+            ttft_speedup=wt / ct,
+            throughput_ratio=(
+                chunked.throughput_tok_s / whole.throughput_tok_s
+                if whole.throughput_tok_s else 0.0
+            ),
+        )
     write_results("decode")
     return stats
 

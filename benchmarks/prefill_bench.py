@@ -2,7 +2,10 @@
 
 Tokens/s of the packed-ternary serve path vs the MAD-style dense path over
 prompt lengths (the paper's headline: Vec-LUT throughput scales ~linearly
-with parallel tokens, unlike scalar LUT)."""
+with parallel tokens, unlike scalar LUT). The serving arm compares
+admission-time whole-prompt prefill (serial B=1 passes per request) against
+chunked prefill (every prefilling slot's chunk batched into one mixed step
+per tick) on a bursty multi-request admission."""
 from __future__ import annotations
 
 import jax
@@ -11,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_cache, init_lm, pack_params, prefill
+from repro.serve import ContinuousBatchingScheduler, Engine, Request
 from .common import emit, time_fn
 
 LENS = [32, 64, 128, 256]
@@ -42,6 +46,39 @@ def run(quick: bool = True):
     vl = [t for s, n, t in out if n == "vlut_packed"]
     if len(vl) >= 2:
         emit("prefill/scaling_first_to_last", 0.0, f"{vl[-1] / vl[0]:.2f}x")
+
+    # ---- serving-path prefill: whole-prompt vs chunked mixed steps --------
+    # A burst of simultaneous admissions, one token of decode each: prefill
+    # work dominates, so tok/s isolates admission. Whole-prompt runs each
+    # prompt as a blocking B=1 pass; chunked batches all slots' chunks into
+    # one (slots, chunk) mixed step per tick.
+    slots, plen = 4, 64 if quick else 128
+    for name, kw in [("whole_prompt", {}), ("chunked", dict(prefill_chunk=32))]:
+        # one engine per arm, warmed on the same shapes: each Engine owns
+        # its own jit closures, so a fresh instance would time compilation
+        eng = Engine(packed, cfg, max_slots=slots, max_len=plen + 8, **kw)
+
+        def serve_once(eng=eng):
+            r = np.random.default_rng(5)
+            sched = ContinuousBatchingScheduler(eng)
+            sched.submit([
+                Request(rid=i,
+                        prompt=r.integers(0, cfg.vocab, plen).astype(np.int32),
+                        max_new_tokens=1)
+                for i in range(slots)
+            ])
+            return sched.run_to_completion()
+
+        serve_once()                       # compile warmup
+        eng.reset_stats()
+        stats = serve_once()
+        emit(
+            f"prefill/serving_{name}", stats.wall_s,
+            f"{stats.prefill_tok_s:.1f} tok/s "
+            f"(pad {stats.prefill_pad_tokens})",
+            prefill_tok_s=stats.prefill_tok_s,
+            prefill_pad_tokens=stats.prefill_pad_tokens,
+        )
     return out
 
 

@@ -2,6 +2,12 @@
 ternary weights, then serves a mixed prefill/decode request stream.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch gemma3-1b]
+
+--prefill-chunk N turns on chunked prefill: admission claims a slot and the
+prompt streams in N tokens per tick through one batched mixed step that also
+carries the decode rows — the Vec-LUT kernels see parallel tokens every tick
+and queued requests stop stalling behind whole-prompt admissions.
+--token-budget caps the real tokens scheduled per tick.
 """
 import argparse
 import time
@@ -20,6 +26,10 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size (0 = whole-prompt admission)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="real tokens scheduled per chunked tick (0 = all)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -29,7 +39,9 @@ def main():
           f"{packed_param_bytes(params) / 2**20:.1f} MiB "
           f"(dense {packed_param_bytes(dense) / 2**20:.1f} MiB)")
 
-    engine = Engine(params, cfg, max_slots=args.slots, max_len=256)
+    engine = Engine(params, cfg, max_slots=args.slots, max_len=256,
+                    prefill_chunk=args.prefill_chunk,
+                    token_budget=args.token_budget)
     sched = ContinuousBatchingScheduler(engine)
     rng = np.random.default_rng(0)
     reqs = [
@@ -40,10 +52,15 @@ def main():
     ]
     sched.submit(reqs)
     stats = sched.run_to_completion()
+    ttft = (f" | median TTFT {1e3 * float(np.median(stats.ttft_s)):.0f} ms"
+            if stats.ttft_s else "")
+    chunked = (f" | {stats.chunk_steps} mixed chunk steps "
+               f"({stats.prefill_pad_tokens} pad tokens)"
+               if args.prefill_chunk else "")
     print(f"completed {stats.completed}/{args.requests} | "
           f"{stats.throughput_tok_s:.1f} tok/s total "
-          f"({stats.prefill_tok_s:.1f} prefill / {stats.decode_tok_s:.1f} decode) | "
-          f"median TTFT {1e3 * float(np.median(stats.ttft_s)):.0f} ms")
+          f"({stats.prefill_tok_s:.1f} prefill / {stats.decode_tok_s:.1f} decode)"
+          f"{ttft}{chunked}")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,10 @@ batched verify step); the summary line then reports acceptance and tok/step.
 (cold slots skip drafting entirely), adding mean_k and skip-rate columns.
 --spec-tree B1,B2,... verifies a draft *tree* (top-B candidates at each of
 the first depths) in one flattened pass, adding a nodes/step column.
+--prefill-chunk N switches admission to chunked prefill: each tick runs one
+batched mixed step carrying every prefilling slot's next N-token chunk plus
+the decode rows, so the Vec-LUT kernels see parallel tokens every tick;
+--token-budget caps the real tokens scheduled per tick.
 """
 import argparse
 
@@ -41,9 +45,18 @@ def main():
     ap.add_argument("--spec-tree", default="",
                     help="comma-separated branching factors (e.g. '2,2') for "
                          "tree-structured multi-candidate verification")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: consume prompts N tokens per tick "
+                         "in one batched mixed prefill/decode step "
+                         "(0 = whole-prompt admission prefill)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="cap on real tokens scheduled per chunked tick "
+                         "(0 = unlimited; needs --prefill-chunk)")
     args = ap.parse_args()
     if (args.spec_adaptive or args.spec_tree) and not args.spec_k:
         ap.error("--spec-adaptive/--spec-tree require --spec-k N (N >= 1)")
+    if args.token_budget and not args.prefill_chunk:
+        ap.error("--token-budget requires --prefill-chunk N (N >= 1)")
     if args.spec_adaptive and args.spec_tree:
         ap.error("--spec-tree and --spec-adaptive are mutually exclusive")
 
@@ -66,6 +79,7 @@ def main():
     engine = Engine(
         params, cfg, max_slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, spec=spec,
+        prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
     )
     sched = ContinuousBatchingScheduler(engine)
     rng = np.random.default_rng(0)
@@ -93,13 +107,20 @@ def main():
     if stats.spec_steps and args.spec_tree:
         spec_cols += f" nodes/step={stats.nodes_per_step:.1f}"
     rej_cols = f" rejected={stats.rejected}" if stats.rejected else ""
-    ttft_ms = 1e3 * float(np.median(stats.ttft_s)) if stats.ttft_s else 0.0
+    chunk_cols = (
+        f" chunk_steps={stats.chunk_steps} pad={stats.prefill_pad_tokens}"
+        if args.prefill_chunk else ""
+    )
+    # no TTFT events (nothing emitted a first token) → omit, never a fake 0
+    ttft_col = (
+        f" ttft_median={1e3 * float(np.median(stats.ttft_s)):.1f} ms"
+        if stats.ttft_s else ""
+    )
     print(
         f"completed={stats.completed}/{args.requests} "
         f"throughput={stats.throughput_tok_s:.1f} tok/s "
-        f"(prefill {stats.prefill_tok_s:.1f}, decode {stats.decode_tok_s:.1f}) "
-        f"ttft_median={ttft_ms:.1f} ms"
-        f"{spec_cols}{rej_cols}"
+        f"(prefill {stats.prefill_tok_s:.1f}, decode {stats.decode_tok_s:.1f})"
+        f"{ttft_col}{spec_cols}{chunk_cols}{rej_cols}"
     )
 
 

@@ -13,6 +13,7 @@ from .decoder import (
     prefill,
     prefill_bucket,
     prefill_into_slot,
+    reset_slot_idx,
     rollback_cache,
     scatter_slot_cache,
     verify_step,
@@ -25,7 +26,7 @@ __all__ = [
     "compact_tree_cache", "compress_layout", "decode_step", "init_cache",
     "init_lm", "lm_hidden",
     "lm_logits", "lm_loss", "prefill", "prefill_bucket", "prefill_into_slot",
-    "rollback_cache", "scatter_slot_cache", "verify_step",
+    "reset_slot_idx", "rollback_cache", "scatter_slot_cache", "verify_step",
     "encdec_init", "encdec_loss", "encode",
     "pack_params", "packed_param_bytes", "param_count",
 ]

@@ -261,11 +261,18 @@ def attn_apply(
                 # one slot per tree node; siblings share a *position* but
                 # must not share a slot, or the scatter would clobber them
                 slots = (start[:, None] + jnp.arange(s, dtype=jnp.int32)) % buf
+            elif verify:
+                # full-buffer multi-token write: a column whose position
+                # passes the buffer end (a chunked prefill's mask-padded
+                # tail, a decode rider's pad columns) must be DROPPED by
+                # the scatter, never wrapped onto the slot's own early
+                # prompt K/V — rollback is idx-only and cannot undo that
+                slots = positions
             else:
                 slots = positions % buf                             # (B, S)
-            ck = cache["k"].at[bidx, slots].set(k)
-            cv = cache["v"].at[bidx, slots].set(v)
-            sp = cache["slot_pos"].at[bidx, slots].set(positions)
+            ck = cache["k"].at[bidx, slots].set(k, mode="drop")
+            cv = cache["v"].at[bidx, slots].set(v, mode="drop")
+            sp = cache["slot_pos"].at[bidx, slots].set(positions, mode="drop")
         new_cache = {
             "k": shard_act(ck, "kv_cache"),
             "v": shard_act(cv, "kv_cache"),

@@ -65,6 +65,7 @@ def block_apply(
     causal: bool = True,
     verify: bool = False,
     tree=None,
+    prefill_resume: bool = False,
 ):
     """→ (x, new_cache, aux_loss)."""
     h = rmsnorm_apply(p["mixer_norm"], x, cfg.norm_eps)
@@ -76,7 +77,7 @@ def block_apply(
     elif spec.mixer == "mla":
         y, new_cache = mla_apply(
             p["mixer"], h, cfg=cfg, spec=spec, mode=mode, cache=cache,
-            verify=verify, tree=tree,
+            verify=verify, tree=tree, prefill_resume=prefill_resume,
         )
     else:
         if verify:

@@ -90,6 +90,7 @@ def _stage_apply(
     causal: bool,
     verify: bool = False,
     tree=None,
+    prefill_resume: bool = False,
 ):
     has_cache = cache is not None
     carry_cache = has_cache and cfg.cache_in_carry
@@ -122,7 +123,7 @@ def _stage_apply(
                 x, nc, a = block_apply(
                     p_rep[f"b{i}"], x, cfg=cfg, spec=spec, mode=mode,
                     cache=c, enc_out=enc_out, causal=causal, verify=verify,
-                    tree=tree,
+                    tree=tree, prefill_resume=prefill_resume,
                 )
                 x = shard_act(x, "btd")
                 aux = aux + a
@@ -151,7 +152,7 @@ def _stage_apply(
             x, nc, a = block_apply(
                 p_rep[f"b{i}"], x, cfg=cfg, spec=spec, mode=mode,
                 cache=c, enc_out=enc_out, causal=causal, verify=verify,
-                tree=tree,
+                tree=tree, prefill_resume=prefill_resume,
             )
             x = shard_act(x, "btd")
             aux = aux + a
@@ -205,6 +206,7 @@ def lm_hidden(
     causal: bool = True,
     verify: bool = False,
     tree=None,
+    prefill_resume: bool = False,
 ):
     """inputs: int32 tokens (B, S) or pre-embedded (B, S, d) (stub frontends).
     → (hidden (B,S,d), new_cache, aux_loss). verify=True: S>1 tokens are a
@@ -212,6 +214,11 @@ def lm_hidden(
     marks them as a flattened draft tree (verify only)."""
     if tree is not None and not verify:
         raise ValueError("tree attention is only defined for verify steps")
+    if prefill_resume and (tree is not None or not verify):
+        raise ValueError(
+            "prefill_resume is the chunked-prefill verify read path; it is "
+            "undefined for trees or non-verify forwards"
+        )
     if inputs.dtype in (jnp.int32, jnp.int64):
         x = embed_apply(params["embed"], inputs, cfg)
     else:
@@ -225,6 +232,7 @@ def lm_hidden(
         x, aux, nc = _stage_apply(
             params["stages"][si], x, aux, cfg=cfg, pattern=pat, mode=mode,
             cache=c, enc_out=enc_out, causal=causal, verify=verify, tree=tree,
+            prefill_resume=prefill_resume,
         )
         new_cache.append(nc)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
@@ -312,7 +320,8 @@ def decode_step(params, tokens, cache, cfg, *, mode="serve"):
     return logits, new_cache
 
 
-def verify_step(params, tokens, cache, cfg, *, mode="serve", tree=None):
+def verify_step(params, tokens, cache, cfg, *, mode="serve", tree=None,
+                prefill_resume=False):
     """Batched multi-token decode — the speculative-verification step.
 
     tokens: (B, S) int32 candidate tokens per slot (column 0 is the last
@@ -335,16 +344,25 @@ def verify_step(params, tokens, cache, cfg, *, mode="serve", tree=None):
     are undone with rollback_cache. S is expected small (draft_k + 1, or the
     tree's node count): the full (B, S, V) logits are materialized."""
     h, new_cache, _ = lm_hidden(
-        params, tokens, cfg, mode=mode, cache=cache, verify=True, tree=tree
+        params, tokens, cfg, mode=mode, cache=cache, verify=True, tree=tree,
+        prefill_resume=prefill_resume,
     )
     logits = _head_matmul(params, h, cfg)
     return logits, new_cache
 
 
-def prefill_bucket(n: int) -> int:
+def prefill_bucket(n: int, max_len: int | None = None) -> int:
     """Pad prompt lengths to 16-multiples → one prefill jit entry per bucket
-    (left-padding gives pad tokens negative positions, masked everywhere)."""
-    return max(16, (n + 15) // 16 * 16)
+    (left-padding gives pad tokens negative positions, masked everywhere).
+
+    The bucket is clamped to `max_len`: a prompt within 15 tokens of max_len
+    (legal whenever max_new_tokens=1) must not round up past the cache —
+    positions would alias mod max_len and the duplicate-index scatter would
+    clobber real prompt K/V nondeterministically."""
+    b = max(16, (n + 15) // 16 * 16)
+    if max_len is not None:
+        b = min(b, max_len)
+    return max(b, n)
 
 
 def prefill_into_slot(
@@ -359,7 +377,7 @@ def prefill_into_slot(
     inside the scan). prefill_fn: jit'd (params, single_cache, tokens) →
     (logits, single_cache). → (logits, new_full_cache, padded_len)."""
     n = len(prompt)
-    bucket = n if exact_len else prefill_bucket(n)
+    bucket = n if exact_len else prefill_bucket(n, max_len)
     single = init_cache(cfg, 1, max_len)
     if bucket != n:
         single = rollback_cache(single, jnp.asarray([n - bucket]))
@@ -381,6 +399,24 @@ def scatter_slot_cache(full_cache, single_cache, slot: int):
     return jax.tree.map(scat, full_cache, single_cache)
 
 
+def reset_slot_idx(cache, slot: int, value: int = 0):
+    """Reset ONE batched slot's cache write position, leaving every other
+    slot untouched — chunked-prefill admission claims a slot without
+    scattering a fresh B=1 cache (the prompt arrives chunk by chunk).
+
+    Stale K/V from the slot's previous occupant needs no clearing: chunk
+    writes re-cover positions contiguously from 0 upward, so every cache
+    entry a query position can see was rewritten by this request's own
+    chunks first, and entries above the write frontier carry recorded
+    positions (or index-as-position values) exceeding every live query."""
+    def fix(path, leaf):
+        if getattr(path[-1], "key", None) == "idx":
+            return leaf.at[..., slot].set(value)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
 def compact_tree_cache(cache, pos, sel, take):
     """Compact a tree verify step's cache window onto the accepted path.
 
@@ -397,7 +433,11 @@ def compact_tree_cache(cache, pos, sel, take):
     take: (B,) int32 — tokens kept this step (window slots d < take stay
           live; the rest get slot_pos = -1 so a stale sibling's small
           position can never satisfy a future query's position mask — the
-          rollback stale-entry safety argument for trees).
+          rollback stale-entry safety argument for trees). A slot that took
+          no part in the verify step (free, or mid-chunked-prefill) must be
+          passed sel=identity and take=N: its window is then a pure no-op —
+          slot_pos is *gathered* like k/v, never synthesized, so live
+          identity entries keep whatever value (including -1) they had.
 
     Only the per-length-axis cache leaves (attn k/v/slot_pos, MLA
     ckv/krope) are touched; everything is a (B, N)-window gather/scatter,
@@ -416,11 +456,14 @@ def compact_tree_cache(cache, pos, sel, take):
             return leaf                  # idx (rollback's job), cross xk/xv
         b = leaf.shape[1]
         bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
-        if key == "slot_pos":
-            vals = jnp.where(live, dst, -1)
-            return leaf.at[:, bidx, dst].set(vals.astype(leaf.dtype))
         idx = src.reshape((1,) + src.shape + (1,) * (leaf.ndim - 3))
         gathered = jnp.take_along_axis(leaf, idx, axis=2)
+        if key == "slot_pos":
+            # the accepted path's depth-d node recorded position pos+d ==
+            # dst, so gathering is exactly the old synthesized value for
+            # live tree entries — but leaves identity (take=N) windows of
+            # non-participating slots byte-for-byte unchanged
+            gathered = jnp.where(live[None], gathered, -1).astype(leaf.dtype)
         return leaf.at[:, bidx, dst].set(gathered)
 
     return jax.tree_util.tree_map_with_path(fix, cache)

@@ -114,10 +114,21 @@ def mla_apply(
     cache: Params | None = None,
     verify: bool = False,
     tree=None,
+    prefill_resume: bool = False,
 ) -> tuple[jax.Array, Params | None]:
     """verify=True runs the absorbed-latent decode path for S>1 incoming
     tokens (speculative multi-token verification) with a per-query causal
     position mask; without it S>1+cache means prefill (within-sequence).
+
+    prefill_resume=True (verify only, S>1) is the chunked-prefill read path:
+    instead of the absorbed formulation it expands the *cached* latents
+    through the same quantized `wkv_b` BitLinear the naive prefill path uses
+    (activation quantization is per-token, so every cached latent row
+    expands to bit-identical K/V regardless of what else is in the buffer)
+    and attends with the position-masked sdpa — a chunk's logits are then
+    token-identical to the whole-prompt prefill path, which the absorbed
+    f32 einsum (no activation quantization) is not. Costs an O(cache-len)
+    expansion per chunk — the chunked-prefill tradeoff, not paid at decode.
 
     tree (spec.tree.DraftTree, verify only): the S tokens are a flattened
     draft tree — node i is written to its own slot start+i but carries
@@ -147,19 +158,48 @@ def mla_apply(
             slots = start[:, None] + jnp.arange(s, dtype=jnp.int32)
         else:
             slots = positions                                         # full buffer
+        # mode="drop": a multi-token write whose position passes the buffer
+        # end (mask-padded chunk tails, decode-rider pad columns) is
+        # discarded — XLA's default clamp would clobber the last cache
+        # entry, and rollback (idx-only) could never undo it
         new_cache = {
             "ckv": shard_act(
-                cache["ckv"].at[bidx, slots].set(ckv.astype(cache["ckv"].dtype)),
+                cache["ckv"].at[bidx, slots].set(
+                    ckv.astype(cache["ckv"].dtype), mode="drop"
+                ),
                 "kv_cache",
             ),
             "krope": shard_act(
-                cache["krope"].at[bidx, slots].set(k_rope.astype(cache["krope"].dtype)),
+                cache["krope"].at[bidx, slots].set(
+                    k_rope.astype(cache["krope"].dtype), mode="drop"
+                ),
                 "kv_cache",
             ),
             "idx": start + s,
         }
 
-    if cache is not None and (s == 1 or verify):
+    if cache is not None and verify and prefill_resume and s > 1:
+        # ---- chunked-prefill resume: naive expansion over the cache ------
+        k_nope, v = _expand_kv(p, new_cache["ckv"], cfg, mode)
+        L = new_cache["ckv"].shape[1]
+        k_rope_all = new_cache["krope"]                              # (B,L,rp)
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(k_rope_all[:, :, None, :], (b, L, h, rp))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # index-as-position: slot i holds position i (the contiguous chunk
+        # writes guarantee every index <= a live query position is real)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[None, :], (b, L)
+        )
+        out = sdpa(
+            q, k.astype(q.dtype), v.astype(q.dtype), positions, kv_pos,
+            causal=True, window=0, chunk=cfg.attn_chunk,
+            dense_max=cfg.attn_dense_max,
+        )
+    elif cache is not None and (s == 1 or verify):
         # ---- absorbed decode over the latent cache -----------------------
         wkv_b = _wkv_b_dense(p, cfg, jnp.float32)                    # (kvl,H,nope+vd)
         w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]

@@ -1,12 +1,42 @@
 """Serving engine: slot-based continuous batching (paper §5.3.2).
 
-The engine owns a batched KV cache with `max_slots` request slots. Each
-scheduler tick performs at most one prefill (a single request's prompt, B=1,
-scattered into its slot) followed by one batched decode step over all active
-slots — llama.cpp's mixed prefill/decode policy, the workload on which the
-paper reports 273.5 tok/s. All shapes are static (JAX-compile-once): requests
-of different lengths coexist through per-slot `idx` positions and position-
-masked attention.
+The engine owns a batched KV cache with `max_slots` request slots. All
+shapes are static (JAX-compile-once): requests of different lengths coexist
+through per-slot `idx` positions and position-masked attention.
+
+Two prefill policies:
+
+  * Whole-prompt (`prefill_chunk=0`, the legacy path): admission runs the
+    request's entire prompt as one blocking B=1 bucketed prefill scattered
+    into its slot, then every tick runs one batched decode step — llama.cpp's
+    mixed prefill/decode policy, the workload on which the paper reports
+    273.5 tok/s. Under load the Vec-LUT kernels see their big-M win only at
+    admission; every active decode slot stalls behind each whole prompt.
+
+  * Chunked (`prefill_chunk=N`): admission only *claims* a slot
+    (PREFILLING); the prompt is consumed N tokens per tick by a single
+    batched (max_slots, N) multi-token step (`models.verify_step` — the same
+    machinery as speculative verification, so GQA and MLA are exact) that
+    carries every scheduled prefill chunk AND, when speculation is off, the
+    last-token decode rows of all DECODING slots. The mpGeMM kernels see
+    M ≈ chunk x (prefilling slots) + (decode rows) parallel tokens *every*
+    tick, not just at admission — serving itself becomes the parallel-token
+    workload of the paper's thesis. A left-over chunk is mask-padded: the
+    pad tail's positions exceed every real query position (causal position
+    mask) and its cache writes are rolled back before the next step.
+    `token_budget` caps the real tokens scheduled per tick (decode rows
+    first, then FCFS prefill chunks; at least one chunk always advances).
+    TTFT is measured when the *last* chunk completes and the first token is
+    sampled. Greedy chunked output is token-identical to the whole-prompt
+    path. Chunked mode needs rollbackable caches (full-buffer attention/MLA;
+    ssm and windowed ring caches are refused, exactly like speculation).
+
+With speculation enabled, PREFILLING slots are excluded from draft/verify
+rows until their last chunk lands (the drafter's `on_admit` fires at the
+PREFILLING→DECODING transition, so a ModelDrafter's mirrored cache syncs to
+the full prompt exactly once); each tick then runs the chunk step over
+prefilling slots followed by the usual spec step over decoding slots —
+chain, adaptive-K, and tree modes all compose with chunked prefill.
 
 With `spec=SpecConfig(...)` the decode step becomes speculative: a drafter
 proposes K tokens per slot, one batched `models.verify_step` runs the target
@@ -56,7 +86,7 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
 from repro.models import compact_tree_cache, decode_step as model_decode
 from repro.models import init_cache, prefill as model_prefill
-from repro.models import prefill_into_slot, rollback_cache
+from repro.models import prefill_into_slot, reset_slot_idx, rollback_cache
 from repro.models import verify_step as model_verify
 from repro.spec import SpecConfig
 from .sampling import accept_speculative, accept_tree, sample
@@ -101,6 +131,7 @@ class Request:
     max_new_tokens: int = 16
     # filled by the engine
     slot: int = -1
+    prefill_pos: int = 0          # prompt tokens already in cache (chunked)
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
     error: str = ""               # admission rejection reason (done, no output)
@@ -138,6 +169,8 @@ class Engine:
         mpgemm_fusion: str | None = None,
         mpgemm_interpret: bool | None = None,
         spec: SpecConfig | None = None,
+        prefill_chunk: int = 0,
+        token_budget: int = 0,
     ):
         self.params = params
         self.cfg = cfg
@@ -164,6 +197,52 @@ class Engine:
         self._decode = jax.jit(
             lambda p, c, t: model_decode(p, t, c, cfg, mode=mode),
             donate_argnums=(1,),
+        )
+        # chunked prefill: admission claims a slot (PREFILLING); the prompt
+        # is consumed prefill_chunk tokens per step() by one batched
+        # multi-token pass shared with the decode rows (see _chunk_step)
+        if prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
+        if token_budget < 0:
+            raise ValueError(f"token_budget must be >= 0, got {token_budget}")
+        if prefill_chunk:
+            if prefill_chunk > max_len:
+                raise ValueError(
+                    f"prefill_chunk ({prefill_chunk}) exceeds max_len "
+                    f"({max_len}); the chunk step cannot outgrow the cache"
+                )
+            if any(s.mixer == "ssm" for s in cfg.layer_specs()):
+                raise ValueError(
+                    "chunked prefill needs rollbackable KV caches (the "
+                    "mask-padded chunk tail is rolled back); "
+                    f"{cfg.name} has ssm layer(s)"
+                )
+            if any(s.window for s in cfg.layer_specs()):
+                raise ValueError(
+                    "chunked prefill is exact only for full-buffer KV "
+                    f"caches; {cfg.name} has windowed (ring-cache) layers, "
+                    "whose in-window history the padded-tail rollback would "
+                    "clobber"
+                )
+        self.prefill_chunk = prefill_chunk
+        self.token_budget = token_budget
+        self.prefilling: dict[int, Request] = {}    # slot → mid-prefill req
+        # decode rows ride the chunk step only when their logits come off
+        # the very path plain decode uses: MLA decode is absorbed while the
+        # chunk step reads via prefill_resume (naive expansion, quantized
+        # like whole-prompt prefill) — those slots decode in their own
+        # absorbed step each tick instead, exactly like spec engines
+        self._decode_rides = spec is None and not any(
+            s.mixer == "mla" for s in cfg.layer_specs()
+        )
+        self._chunk_verify = (
+            jax.jit(
+                lambda p, c, t: model_verify(
+                    p, t, c, cfg, mode=mode, prefill_resume=True
+                ),
+                donate_argnums=(1,),
+            )
+            if prefill_chunk else None
         )
         # speculative decoding (draft → verify → accept)
         self.spec = spec
@@ -213,8 +292,11 @@ class Engine:
         self.slot_skip_streak = np.zeros(max_slots, np.int64)
         self.slot_k_eff = np.full(max_slots, self._draft_k, np.int64)
         # stats
-        self.prefill_tokens = 0
+        self.prefill_tokens = 0     # real prompt tokens prefilled
+        self.prefill_pad_tokens = 0  # bucket/chunk padding (not real work)
         self.decode_tokens = 0
+        self.decode_steps = 0       # batched decode/verify step invocations
+        self.chunk_steps = 0        # batched mixed chunk-step invocations
         self.spec_steps = 0         # batched verify steps (engine ticks)
         self.spec_slot_steps = 0    # per-slot verify steps (Σ active slots)
         self.spec_skipped_steps = 0  # slot steps that skipped drafting (k_eff=0)
@@ -257,8 +339,14 @@ class Engine:
             )
 
     def add(self, req: Request) -> bool:
-        """Prefill a request into a free slot. False if no slot free; raises
-        ValueError if the request cannot fit in max_len at all."""
+        """Admit a request into a free slot. False if no slot free; raises
+        ValueError if the request cannot fit in max_len at all.
+
+        Whole-prompt mode (prefill_chunk=0) runs the full B=1 bucketed
+        prefill here and samples the first token. Chunked mode only claims
+        the slot (PREFILLING): the prompt is consumed chunk by chunk by
+        subsequent `step()` calls and the first token is sampled when the
+        last chunk lands."""
         self._validate(req)
         try:
             slot = self.slot_free.index(True)
@@ -266,6 +354,15 @@ class Engine:
             return False
         req.slot = slot
         req.t_submit = req.t_submit or time.perf_counter()
+        if self.prefill_chunk:
+            self.slot_free[slot] = False
+            req.prefill_pos = 0
+            self.prefilling[slot] = req
+            # the slot's write position restarts at 0; stale K/V needs no
+            # clearing (see models.reset_slot_idx) — contiguous chunk
+            # writes re-cover every position before a query can see it
+            self.cache = reset_slot_idx(self.cache, slot)
+            return True
         # SSM/hybrid archs can't mask pads inside the scan → exact lengths.
         has_ssm = any(s.mixer == "ssm" for s in self.cfg.layer_specs())
         with kernel_ops.dispatch_override(**self._mpgemm):
@@ -274,26 +371,39 @@ class Engine:
                 max_len=self.max_len, prefill_fn=self._prefill1,
                 exact_len=has_ssm,
             )
-        self.prefill_tokens += padded
-        nxt = self._sample(logits)
-        req.generated.append(int(nxt[0]))
-        req.t_first_token = time.perf_counter()
-        self.last_token = self.last_token.at[slot, 0].set(nxt[0])
+        # only real prompt tokens are prefill work; bucket padding is
+        # accounted separately so tok/s can't be inflated by left-pads
+        self.prefill_tokens += len(req.prompt)
+        self.prefill_pad_tokens += padded - len(req.prompt)
+        nxt = int(self._sample(logits)[0])
+        self._start_decoding(slot, req, nxt, time.perf_counter())
+        return True
+
+    def _start_decoding(self, slot: int, req: Request, first_tok: int,
+                        now: float) -> None:
+        """Prefill complete (whole-prompt or final chunk): record the first
+        generated token and transition the slot to DECODING — or finish it
+        outright when max_new_tokens=1 asked for nothing more."""
+        req.generated.append(first_tok)
+        req.t_first_token = now
+        self.last_token = self.last_token.at[slot, 0].set(first_tok)
         if len(req.generated) >= req.max_new_tokens:
             # prefill already produced everything asked for (max_new_tokens=1)
             req.done = True
             req.t_done = req.t_first_token
-            return True
+            self.slot_free[slot] = True
+            return
         self.slot_free[slot] = False
         self.slot_req[slot] = req
         self.active[slot] = True
         if self.drafter is not None:
+            # chunked mode defers this to the PREFILLING→DECODING
+            # transition: the drafter syncs the full prompt exactly once
             self.drafter.on_admit(slot, req.prompt)
         # fresh request → optimistic acceptance state (starts at full k)
         self.slot_accept[slot] = 1.0
         self.slot_skip_streak[slot] = 0
         self.slot_k_eff[slot] = self._draft_k
-        return True
 
     def _sample(self, logits):
         self.rng, k = jax.random.split(self.rng)
@@ -319,6 +429,122 @@ class Engine:
         if self.drafter is not None:
             self.drafter.on_release(slot)
 
+    @property
+    def has_work(self) -> bool:
+        """True when a step() would do anything: slots mid-prefill or
+        actively decoding. The scheduler skips the tick's batched step
+        entirely when this is False (e.g. every admission was satisfied by
+        prefill alone) instead of burning a dispatch on an empty batch."""
+        return bool(self.prefilling) or bool(self.active.any())
+
+    def _idx_vector(self) -> np.ndarray:
+        """Host mirror of every slot's true cache write position: a DECODING
+        slot's idx is its last sampled token's cache position (that token is
+        never written until the next step), a PREFILLING slot's is its
+        consumed-prompt prefix, and free slots sit at 0 (chunked admission
+        resets them; whole-prompt admission rescatters a fresh cache).
+        Every batched rollback starts from this vector so a step over one
+        subset of slots can never scribble the idx of another."""
+        idx = np.zeros(self.max_slots, np.int64)
+        for slot, req in self.prefilling.items():
+            idx[slot] = req.prefill_pos
+        for slot, req in self.slot_req.items():
+            if self.active[slot]:
+                idx[slot] = len(req.prompt) + len(req.generated) - 1
+        return idx
+
+    def step(self):
+        """One engine tick: the chunked-prefill mixed step (when any slot is
+        PREFILLING), then/or the batched decode step. The scheduler's tick
+        entry point; whole-prompt engines fall straight through to
+        decode_once()."""
+        if self.prefilling:
+            self._chunk_step()
+            if not self._decode_rides:
+                # spec engines (draft→verify→accept) and MLA archs (absorbed
+                # decode vs the chunk step's prefill_resume read) exclude
+                # decode rows from the chunk step — their own decode step
+                # runs in the same tick
+                self.decode_once()
+        else:
+            self.decode_once()
+
+    def _chunk_step(self):
+        """One batched mixed prefill/decode step over the (max_slots,
+        prefill_chunk) token grid — the tentpole of chunked prefill.
+
+        Row contents: a scheduled PREFILLING slot carries its next c =
+        min(chunk, remaining) prompt tokens (left-over chunk mask-padded —
+        pad positions exceed every real query position and are rolled back
+        below); when speculation is off, every DECODING slot rides along as
+        a last-token row (column 0 is exactly a plain decode — verify
+        semantics — so mixed ticks keep emitting); all other rows are
+        padding. One `models.verify_step` pass appends everything at
+        per-slot positions, so the Vec-LUT mpGeMM kernels see
+        M ≈ chunk x (scheduled prefills) + (decode rows) real parallel
+        tokens in a single launch.
+
+        `token_budget` caps the real tokens scheduled per step: decode rows
+        are mandatory and count first, then prefill chunks are granted FCFS
+        (admission order); at least one chunk always advances so prefill
+        can never starve."""
+        chunk = self.prefill_chunk
+        include_decode = self._decode_rides and bool(self.active.any())
+        used = int(self.active.sum()) if include_decode else 0
+        budget = self.token_budget
+        chosen: list[tuple[int, int]] = []
+        for slot, req in self.prefilling.items():
+            c = min(chunk, len(req.prompt) - req.prefill_pos)
+            if chosen and budget and used + c > budget:
+                break
+            chosen.append((slot, c))
+            used += c
+        tokens = np.zeros((self.max_slots, chunk), np.int32)
+        col = np.zeros(self.max_slots, np.int64)     # logits column per slot
+        new_idx = self._idx_vector()
+        for slot, c in chosen:
+            req = self.prefilling[slot]
+            tokens[slot, :c] = req.prompt[req.prefill_pos:req.prefill_pos + c]
+            col[slot] = c - 1
+            new_idx[slot] = req.prefill_pos + c
+        decode_slots: list[int] = []
+        if include_decode:
+            last = np.asarray(self.last_token)[:, 0]
+            for slot, req in self.slot_req.items():
+                if not self.active[slot]:
+                    continue
+                tokens[slot, 0] = last[slot]
+                new_idx[slot] += 1          # idx_vector holds last_token's pos
+                decode_slots.append(slot)
+        with kernel_ops.dispatch_override(**self._mpgemm):
+            logits, cache = self._chunk_verify(
+                self.params, self.cache, jnp.asarray(tokens)
+            )
+        rows = jnp.take_along_axis(
+            logits, jnp.asarray(col)[:, None, None], axis=1
+        )[:, 0]                                                  # (B, V)
+        nxt = np.asarray(self._sample(rows))
+        now = time.perf_counter()
+        self.chunk_steps += 1
+        for slot, c in chosen:
+            req = self.prefilling[slot]
+            req.prefill_pos += c
+            self.prefill_tokens += c
+            self.prefill_pad_tokens += chunk - c
+            if req.prefill_pos < len(req.prompt):
+                continue
+            # final chunk landed: first token, PREFILLING → DECODING
+            del self.prefilling[slot]
+            self._start_decoding(slot, req, int(nxt[slot]), now)
+        for slot in decode_slots:
+            req = self.slot_req[slot]
+            self.decode_tokens += 1
+            req.generated.append(int(nxt[slot]))
+            self.last_token = self.last_token.at[slot, 0].set(nxt[slot])
+            if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
+                self._finish_slot(slot, req, now)
+        self.cache = rollback_cache(cache, jnp.asarray(new_idx))
+
     def decode_once(self):
         """One batched decode step over every active slot. With spec enabled
         this is draft → verify → accept (1..k+1 tokens per slot)."""
@@ -328,6 +554,15 @@ class Engine:
             return self._decode_spec_tree()
         if self.spec is not None:
             return self._decode_spec()
+        self.decode_steps += 1
+        # the jit'd decode step advances EVERY slot's idx by 1 and scatters
+        # a (garbage) token at every slot's frontier; with slots mid-chunked-
+        # prefill that drift must be undone — the restored frontier index is
+        # rewritten by the slot's next chunk before it can be attended
+        restore = bool(self.prefilling)
+        if restore:
+            new_idx = self._idx_vector()
+            new_idx[np.asarray(self.active)] += 1    # decode wrote last_token
         with kernel_ops.dispatch_override(**self._mpgemm):
             logits, self.cache = self._decode(self.params, self.cache, self.last_token)
         nxt = np.asarray(self._sample(logits))                       # (B,)
@@ -340,6 +575,8 @@ class Engine:
             req.generated.append(int(nxt[slot]))
             if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
                 self._finish_slot(slot, req, now)
+        if restore:
+            self.cache = rollback_cache(self.cache, jnp.asarray(new_idx))
 
     def _choose_k_eff(self) -> np.ndarray:
         """Per-slot effective draft length for this step: spec.k everywhere
@@ -419,10 +656,10 @@ class Engine:
             draft_probs=draft_probs, draft_mask=jnp.asarray(mask),
         )
         n_acc, out = np.asarray(n_acc), np.asarray(out)
-        # free slots get an arbitrary idx (pos stays 0 for them): harmless —
-        # admission rescatters a complete fresh cache (idx included) before
-        # any reuse, and nothing reads a free slot's cache meanwhile.
-        new_idx = pos + k + 1
+        # inactive slots keep their true idx (free: 0, PREFILLING: the
+        # consumed-prompt prefix) — the batched rollback must never scribble
+        # a mid-prefill slot's write position
+        new_idx = self._idx_vector()
         new_last = np.asarray(self.last_token).copy()
         now = time.perf_counter()
         for slot, req in list(self.slot_req.items()):
@@ -444,6 +681,7 @@ class Engine:
             if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
                 self._finish_slot(slot, req, now)
         self.spec_steps += 1
+        self.decode_steps += 1
         self.last_token = jnp.asarray(new_last)
         self.cache = rollback_cache(cache, jnp.asarray(new_idx))
 
@@ -470,8 +708,12 @@ class Engine:
             tokens, logits, tree, key, temperature=self.temperature
         )
         n_acc, out, path = np.asarray(n_acc), np.asarray(out), np.asarray(path)
-        new_idx = pos + 1                            # free slots: arbitrary
-        take_arr = np.zeros(self.max_slots, np.int64)
+        new_idx = self._idx_vector()    # inactive slots keep their true idx
+        # slots outside this verify step (free or PREFILLING) pass take =
+        # n_nodes with an identity sel: compact_tree_cache leaves their
+        # window byte-for-byte unchanged instead of stamping slot_pos = -1
+        # over a mid-prefill slot's live prefix
+        take_arr = np.full(self.max_slots, n_nodes, np.int64)
         new_last = np.asarray(self.last_token).copy()
         now = time.perf_counter()
         for slot, req in list(self.slot_req.items()):
@@ -497,6 +739,7 @@ class Engine:
             if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
                 self._finish_slot(slot, req, now)
         self.spec_steps += 1
+        self.decode_steps += 1
         self.last_token = jnp.asarray(new_last)
         # window compaction: gather the winning path's nodes onto contiguous
         # slots (depth d → slot pos+d) and invalidate the losers, so the
@@ -516,7 +759,8 @@ class Engine:
     def reset_stats(self):
         """Zero the token/acceptance counters (e.g. after a warmup run, so a
         timed run's stats exclude it). Slot/cache state is untouched."""
-        self.prefill_tokens = self.decode_tokens = 0
+        self.prefill_tokens = self.prefill_pad_tokens = self.decode_tokens = 0
+        self.decode_steps = self.chunk_steps = 0
         self.spec_steps = self.spec_slot_steps = self.spec_skipped_steps = 0
         self.drafted_tokens = self.accepted_tokens = self.verified_nodes = 0
 

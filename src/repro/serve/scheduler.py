@@ -1,5 +1,13 @@
-"""Continuous-batching scheduler: FCFS admission, one prefill per tick, then
-a batched decode step (paper §5.3.2's mixed prefill/decode workload).
+"""Continuous-batching scheduler: FCFS admission + one batched engine step
+per tick (paper §5.3.2's mixed prefill/decode workload).
+
+Whole-prompt engines (prefill_chunk=0) admit at most one request per tick
+(each admission is a blocking B=1 prefill) before the batched decode step.
+Chunked engines admit every queued request that gets a slot — admission only
+claims the slot — and the engine's token budget paces the prefill chunks
+across the subsequent mixed steps; TTFT is then measured when a request's
+*last* chunk completes and its first token is sampled. Ticks with no work
+(no slot prefilling or decoding) skip the batched step entirely.
 
 Pure-python control around the jit'd engine steps; per-request latency and
 throughput accounting built in (used by benchmarks/decode_bench.py to
@@ -25,7 +33,8 @@ from .engine import (
 #: engine counters ServeStats mirrors; run_to_completion snapshots them so a
 #: scheduler reused across runs reports per-run deltas, not lifetime totals
 _ENGINE_COUNTERS = (
-    "prefill_tokens", "decode_tokens", "spec_steps", "spec_slot_steps",
+    "prefill_tokens", "prefill_pad_tokens", "decode_tokens", "decode_steps",
+    "chunk_steps", "spec_steps", "spec_slot_steps",
     "spec_skipped_steps", "drafted_tokens", "accepted_tokens",
     "verified_nodes",
 )
@@ -34,8 +43,11 @@ _ENGINE_COUNTERS = (
 @dataclasses.dataclass
 class ServeStats:
     wall_s: float = 0.0
-    prefill_tokens: int = 0
+    prefill_tokens: int = 0         # real prompt tokens (padding excluded)
+    prefill_pad_tokens: int = 0     # bucket/chunk padding, reported separately
     decode_tokens: int = 0
+    decode_steps: int = 0           # batched decode/verify step invocations
+    chunk_steps: int = 0            # batched mixed chunk-step invocations
     completed: int = 0
     rejected: int = 0               # failed admission (Request.error set)
     ttft_s: list = dataclasses.field(default_factory=list)
@@ -110,14 +122,23 @@ class ContinuousBatchingScheduler:
             self.queue.append(r)
 
     def tick(self):
-        """One scheduler iteration: ≤1 prefill admission + 1 decode step.
+        """One scheduler iteration: admissions + 1 batched engine step.
+
+        Whole-prompt engines admit ≤1 request (each admission is a blocking
+        B=1 prefill); chunked engines admit every queued request that gets a
+        slot — claims are free, and the engine's token budget paces the
+        prefill chunks across subsequent mixed steps.
 
         A request the engine can never fit (prompt + budget > max_len) is
         rejected in place — `error` set, `done` stays False, no output; see
         `self.rejected` — so one bad request aborts itself, not the batch.
         A rejection does not consume the tick's admission: the scheduler
         keeps trying subsequent queued requests until one admits, the engine
-        reports no free slot, or the queue drains."""
+        reports no free slot, or the queue drains. A tick with nothing
+        prefilling or decoding (every admission satisfied by prefill alone)
+        skips the batched step instead of burning a dispatch on an empty
+        batch."""
+        multi = bool(self.engine.prefill_chunk)
         while self.queue:
             head = self.queue[0]
             try:
@@ -126,15 +147,20 @@ class ContinuousBatchingScheduler:
                 self.queue.popleft()
                 if head.done:          # satisfied by prefill alone
                     self.completed.append(head)
-                break                  # one successful admission per tick
+                if not multi:
+                    break              # one blocking admission per tick
             except ValueError as e:
                 head.error = str(e)
                 self.rejected.append(head)
                 self.queue.popleft()   # rejected in place; try the next
-        before = dict(self.engine.slot_req)
-        self.engine.decode_once()
-        for slot in before.keys() - self.engine.slot_req.keys():
-            self.completed.append(before[slot])
+        before = list(self.engine.slot_req.values()) + list(
+            self.engine.prefilling.values()
+        )
+        if self.engine.has_work:
+            self.engine.step()
+        for r in before:
+            if r.done:                 # finished this step (decode or final
+                self.completed.append(r)  # chunk with max_new_tokens=1)
 
     def run_to_completion(self, max_ticks: int = 100_000) -> ServeStats:
         """Drain the queue (≤ max_ticks); → ServeStats for this run.
@@ -151,7 +177,7 @@ class ContinuousBatchingScheduler:
             k: min(self._reported[k], getattr(self.engine, k))
             for k in _ENGINE_COUNTERS
         }
-        pending = lambda: self.queue or self.engine.n_active
+        pending = lambda: self.queue or self.engine.has_work
         ticks = 0
         while pending() and ticks < max_ticks:
             self.tick()
@@ -162,6 +188,7 @@ class ContinuousBatchingScheduler:
         all_reqs: list[Request] = (
             self.completed
             + list(self.engine.slot_req.values())
+            + list(self.engine.prefilling.values())
             + list(self.queue)
         )
         self._reported = {

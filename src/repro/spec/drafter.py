@@ -15,7 +15,10 @@ class Drafter:
     lifecycle hooks are optional (stateless drafters ignore them)."""
 
     def on_admit(self, slot: int, prompt: np.ndarray) -> None:
-        """A request was prefilled into `slot` (prompt = its tokens)."""
+        """A request's prompt is fully in `slot`'s cache (prompt = its
+        tokens). Under chunked prefill this fires at the PREFILLING→DECODING
+        transition — after the *last* chunk — never mid-prefill, so a
+        mirrored-cache drafter syncs the whole prompt exactly once."""
 
     def on_release(self, slot: int) -> None:
         """The request in `slot` finished; the slot will be reused."""

@@ -1,0 +1,327 @@
+"""Chunked prefill + mixed prefill/decode batching.
+
+The exactness contract: a chunked engine's greedy serving output is token-
+identical to the whole-prompt admission-prefill path — across chunk sizes
+(prompts shorter and longer than the chunk), GQA and MLA archs, and with
+speculation in chain and tree modes. Plus the prefill-path bugfix
+regressions this PR sweeps: the prefill bucket's max_len clamp, real-vs-pad
+prefill token accounting, the idle-tick decode skip, and token-budget chunk
+pacing.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_lm, lm_hidden, pack_params, prefill_bucket
+from repro.models.decoder import _head_matmul
+from repro.serve import ContinuousBatchingScheduler, Engine, Request
+from repro.spec import SpecConfig
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-360m", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def served_mla():
+    cfg = get_config("deepseek-v3-671b", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    return cfg, params
+
+
+def _run(cfg, params, prompts, *, max_new=6, slots=3, max_len=96, **kw):
+    eng = Engine(params, cfg, max_slots=slots, max_len=max_len, **kw)
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    sched.submit(reqs)
+    stats = sched.run_to_completion()
+    return [r.generated for r in reqs], stats, eng
+
+
+def _prompts(cfg, rng, lens):
+    return [rng.integers(0, cfg.vocab, size=n).astype(np.int32) for n in lens]
+
+
+# --------------------------------------------------------------------------
+# prefill_bucket max_len clamp (pure, no model)
+# --------------------------------------------------------------------------
+class TestPrefillBucket:
+    def test_rounds_up_to_16(self):
+        assert prefill_bucket(1) == 16
+        assert prefill_bucket(16) == 16
+        assert prefill_bucket(17) == 32
+
+    def test_clamped_to_max_len(self):
+        """Regression: a prompt within 15 tokens of max_len bucketed past
+        the cache — positions aliased mod max_len and the duplicate-index
+        scatter clobbered real prompt K/V nondeterministically."""
+        assert prefill_bucket(19, max_len=20) == 20
+        assert prefill_bucket(30, max_len=32) == 32
+        assert prefill_bucket(17, max_len=20) == 20
+        # clamp never cuts below the prompt itself
+        assert prefill_bucket(19, max_len=19) == 19
+        # far from the boundary the bucket is unchanged
+        assert prefill_bucket(19, max_len=512) == 32
+        assert prefill_bucket(19) == 32
+
+
+# --------------------------------------------------------------------------
+# Chunked admission mechanics (no forward pass → fast lane)
+# --------------------------------------------------------------------------
+class TestChunkedAdmission:
+    def test_claim_runs_no_forward(self):
+        """Chunked admission only claims the slot: params are never touched
+        (passing None proves no prefill ran) and the request sits in
+        PREFILLING with nothing generated."""
+        cfg = get_config("smollm-360m", smoke=True)
+        eng = Engine(None, cfg, max_slots=3, max_len=64, prefill_chunk=16)
+        for i in range(3):
+            assert eng.add(Request(rid=i, prompt=np.arange(8, dtype=np.int32),
+                                   max_new_tokens=4))
+        assert sorted(eng.prefilling) == [0, 1, 2]
+        assert eng.has_work and eng.n_active == 0
+        assert all(not r.generated for r in eng.prefilling.values())
+        # a fourth request has no slot
+        assert not eng.add(Request(rid=3, prompt=np.arange(8, dtype=np.int32)))
+
+    def test_admission_budget_still_enforced(self):
+        cfg = get_config("smollm-360m", smoke=True)
+        eng = Engine(None, cfg, max_slots=1, max_len=32, prefill_chunk=16)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.add(Request(rid=0, prompt=np.arange(30, dtype=np.int32),
+                            max_new_tokens=8))
+
+    def test_rejects_windowed_and_ssm_archs(self):
+        """Chunked prefill rolls back the mask-padded chunk tail — ring
+        caches and SSM state can't be rolled back, mirroring speculation."""
+        with pytest.raises(ValueError, match="window"):
+            Engine(None, get_config("gemma3-1b", smoke=True),
+                   max_slots=1, max_len=64, prefill_chunk=16)
+        with pytest.raises(ValueError, match="ssm"):
+            Engine(None, get_config("mamba2-1.3b", smoke=True),
+                   max_slots=1, max_len=64, prefill_chunk=16)
+
+    def test_knob_validation(self):
+        cfg = get_config("smollm-360m", smoke=True)
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            Engine(None, cfg, max_len=64, prefill_chunk=-1)
+        with pytest.raises(ValueError, match="max_len"):
+            Engine(None, cfg, max_len=64, prefill_chunk=128)
+        with pytest.raises(ValueError, match="token_budget"):
+            Engine(None, cfg, max_len=64, token_budget=-1)
+
+
+# --------------------------------------------------------------------------
+# Greedy exactness vs the whole-prompt path
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+class TestChunkedExactness:
+    LENS = (7, 19, 34, 4, 25)           # spans <chunk and >chunk for 16
+
+    def test_gqa_chunk16(self, served, rng):
+        cfg, params = served
+        prompts = _prompts(cfg, rng, self.LENS)
+        base, bstats, _ = _run(cfg, params, prompts)
+        got, cstats, _ = _run(cfg, params, prompts, prefill_chunk=16)
+        assert got == base
+        assert cstats.chunk_steps > 0
+        # identical real prefill work, padding reported separately
+        assert cstats.prefill_tokens == bstats.prefill_tokens == sum(self.LENS)
+
+    def test_gqa_chunk64_prompts_shorter_and_longer(self, served, rng):
+        """chunk=64: every prompt shorter than the chunk (single mask-padded
+        chunk) plus one longer (multi-chunk)."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (7, 40, 70))
+        base, _, _ = _run(cfg, params, prompts, max_len=160)
+        got, stats, _ = _run(cfg, params, prompts, max_len=160,
+                             prefill_chunk=64)
+        assert got == base
+        assert stats.chunk_steps > 0
+
+    def test_mla_chunk16(self, served_mla, rng):
+        cfg, params = served_mla
+        prompts = _prompts(cfg, rng, self.LENS)
+        base, _, _ = _run(cfg, params, prompts)
+        got, _, _ = _run(cfg, params, prompts, prefill_chunk=16)
+        assert got == base
+
+    @pytest.mark.parametrize("spec", [
+        SpecConfig(k=3, drafter="ngram"),
+        SpecConfig(k=3, drafter="ngram", adaptive_k=True),
+        SpecConfig(k=3, drafter="ngram", tree=(2,)),
+    ], ids=["chain", "adaptive", "tree"])
+    def test_gqa_spec_modes(self, served, rng, spec):
+        """PREFILLING slots are excluded from draft/verify rows until their
+        last chunk lands; chain, adaptive-K, and tree speculation all stay
+        token-identical to the plain whole-prompt engine."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, self.LENS)
+        base, _, _ = _run(cfg, params, prompts)
+        got, stats, _ = _run(cfg, params, prompts, prefill_chunk=16, spec=spec)
+        assert got == base
+        assert stats.spec_steps > 0 and stats.chunk_steps > 0
+
+    def test_mla_spec_chain(self, served_mla, rng):
+        cfg, params = served_mla
+        prompts = _prompts(cfg, rng, (7, 19, 34))
+        base, _, _ = _run(cfg, params, prompts)
+        got, _, _ = _run(cfg, params, prompts, prefill_chunk=16,
+                         spec=SpecConfig(k=3, drafter="ngram"))
+        assert got == base
+
+    def test_spec_model_drafter(self, served, rng):
+        """ModelDrafter's mirrored cache syncs the full prompt once, at the
+        PREFILLING→DECODING transition (self-draft oracle: target==draft)."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (7, 19, 34))
+        base, _, _ = _run(cfg, params, prompts)
+        spec = SpecConfig(k=3, drafter="model",
+                          draft_params=params, draft_cfg=cfg)
+        got, stats, _ = _run(cfg, params, prompts, prefill_chunk=16, spec=spec)
+        assert got == base
+        # the oracle accepts everything it drafts
+        assert stats.accepted_tokens == stats.drafted_tokens > 0
+
+    def test_ttft_recorded_after_last_chunk(self, served, rng):
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (34, 7))
+        _, stats, _ = _run(cfg, params, prompts, prefill_chunk=16)
+        assert len(stats.ttft_s) == len(prompts)
+        assert all(t > 0 for t in stats.ttft_s)
+
+
+# --------------------------------------------------------------------------
+# Write-window boundary: padded columns past max_len must be DROPPED
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+class TestChunkWindowBoundary:
+    """Regression: a chunk row whose fixed (chunk-wide) write window crosses
+    max_len used to wrap its mask-padded tail onto the slot's own early
+    prompt K/V (GQA `positions % buf`) or clamp onto the last entry (MLA) —
+    and idx-only rollback can never restore clobbered K/V. Those scatter
+    columns are dropped now (`mode="drop"`)."""
+
+    def test_final_chunk_crossing_max_len_gqa(self, served, rng):
+        cfg, params = served
+        # prompt 70, chunk 64, max_len 96: the final chunk writes positions
+        # 64..127 — columns 96..127 must be dropped, not wrapped onto 0..31
+        prompts = _prompts(cfg, rng, (70,))
+        base, _, _ = _run(cfg, params, prompts, max_len=96, slots=2)
+        got, _, _ = _run(cfg, params, prompts, max_len=96, slots=2,
+                         prefill_chunk=64)
+        assert got == base
+
+    def test_final_chunk_crossing_max_len_mla(self, served_mla, rng):
+        cfg, params = served_mla
+        prompts = _prompts(cfg, rng, (70,))
+        base, _, _ = _run(cfg, params, prompts, max_len=96, slots=2)
+        got, _, _ = _run(cfg, params, prompts, max_len=96, slots=2,
+                         prefill_chunk=64)
+        assert got == base
+
+    def test_decode_rider_near_max_len(self, served, rng):
+        """A decode rider's pad columns (1..chunk-1) cross max_len once its
+        position nears the cache end — long generations must stay exact."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (40, 70))
+        base, _, _ = _run(cfg, params, prompts, max_len=96, slots=2,
+                          max_new=20)
+        got, _, _ = _run(cfg, params, prompts, max_len=96, slots=2,
+                         max_new=20, prefill_chunk=64)
+        assert got == base
+
+
+# --------------------------------------------------------------------------
+# Token-budget chunk pacing
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+class TestTokenBudget:
+    def test_budget_paces_chunks_without_changing_output(self, served, rng):
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (34, 34, 34))
+        base, _, _ = _run(cfg, params, prompts)
+        # unlimited: all three slots advance a chunk per tick
+        wide, swide, _ = _run(cfg, params, prompts, prefill_chunk=16)
+        # tight: one 16-token chunk per tick → more (cheaper) chunk steps
+        tight, stight, _ = _run(cfg, params, prompts, prefill_chunk=16,
+                                token_budget=16)
+        assert wide == tight == base
+        assert stight.chunk_steps > swide.chunk_steps
+        # 3 prompts x ceil(34/16) = 9 chunks, one granted per tick
+        assert stight.chunk_steps == 9
+
+    def test_budget_always_advances_one_chunk(self, served, rng):
+        """A budget smaller than one chunk must not starve prefill."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (34,))
+        base, _, _ = _run(cfg, params, prompts)
+        got, stats, _ = _run(cfg, params, prompts, prefill_chunk=16,
+                             token_budget=1)
+        assert got == base and stats.completed == 1
+
+
+# --------------------------------------------------------------------------
+# Prefill-path bugfix regressions
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+class TestPrefillBugfixes:
+    def test_bucket_boundary_prompt_is_exact(self, served, rng):
+        """Regression: a prompt within 15 tokens of max_len (legal with
+        max_new_tokens=1) used to prefill a 16-multiple bucket PAST max_len,
+        wrapping positions mod max_len and corrupting the prompt's own K/V.
+        The clamped bucket must reproduce the unpadded forward's argmax."""
+        cfg, params = served
+        max_len = 20                     # not a 16-multiple
+        n = 19                           # rounds to 32 > max_len unclamped
+        prompt = rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+        eng = Engine(params, cfg, max_slots=1, max_len=max_len)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=1)
+        assert eng.add(req)
+        import jax.numpy as jnp
+        h, _, _ = lm_hidden(params, jnp.asarray(prompt)[None, :], cfg,
+                            mode="serve")
+        want = int(np.argmax(np.asarray(
+            _head_matmul(params, h[:, -1:, :], cfg)[:, 0]
+        )))
+        assert req.generated == [want]
+
+    def test_prefill_tokens_count_real_work(self, served, rng):
+        """Regression: Engine.add counted left-pad bucket tokens as prefill
+        work, inflating prefill tok/s for any prompt not a 16-multiple."""
+        cfg, params = served
+        lens = (13, 16, 5)               # buckets 16, 16, 16
+        prompts = _prompts(cfg, rng, lens)
+        _, stats, _ = _run(cfg, params, prompts, max_new=2)
+        assert stats.prefill_tokens == sum(lens)
+        assert stats.prefill_pad_tokens == sum(16 - n for n in lens)
+
+    def test_idle_tick_skips_decode(self, served, rng):
+        """Regression: a tick whose admissions were all satisfied by prefill
+        alone (max_new_tokens=1) still ran decode_once on an empty batch.
+        The scheduler must skip the step and leave decode stats untouched."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (6, 9, 12))
+        got, stats, eng = _run(cfg, params, prompts, max_new=1)
+        assert stats.completed == 3
+        assert all(len(g) == 1 for g in got)
+        assert eng.decode_steps == 0 and eng.chunk_steps == 0
+        assert stats.decode_steps == 0 and stats.decode_tokens == 0
+
+    def test_scheduler_counts_prefilling_as_pending(self, served, rng):
+        """run_to_completion must not stop while slots are mid-prefill, and
+        its per-run stats must cover requests finishing from PREFILLING."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (34, 25))
+        got, stats, _ = _run(cfg, params, prompts, max_new=1,
+                             prefill_chunk=16)
+        assert stats.completed == 2
+        assert all(len(g) == 1 for g in got)
+        # max_new_tokens=1: every token came from a final chunk — no decode
+        assert stats.decode_steps == 0 and stats.decode_tokens == 0
+        assert stats.chunk_steps > 0

@@ -328,14 +328,22 @@ class TestAcceptTree:
 class TestCompactTreeCache:
     def test_moves_path_entries_and_invalidates_losers(self):
         """Window slots d < take must receive the accepted path node's entry
-        (slot == position restored); later window slots keep content but get
-        slot_pos = -1 so a stale sibling's small position can never satisfy
-        a future query's position mask."""
+        (slot == position restored — slot_pos is *gathered* from the source
+        node, whose tree write recorded position pos + depth == dst); later
+        window slots get slot_pos = -1 so a stale sibling's small position
+        can never satisfy a future query's position mask."""
         b, L, n = 2, 12, 5
         line = np.tile(np.arange(L, dtype=np.float32)[None, None, :], (1, b, 1))
+        # slot_pos as a real tree verify step leaves it: node j sits at slot
+        # pos+j but records position pos+depth(j) — tree (2,2) depths are
+        # [0, 1, 1, 2, 2] — identity (chain writes) outside the window
+        depths = np.array([0, 1, 1, 2, 2])
+        sp = np.tile(np.arange(L, dtype=np.int32)[None], (b, 1))
+        sp[0, 3:8] = 3 + depths
+        sp[1, 0:5] = 0 + depths
         cache = {
             "k": jnp.asarray(line[..., None, None]),          # (1, B, L, 1, 1)
-            "slot_pos": jnp.asarray(line[0].astype(np.int32)[None]),
+            "slot_pos": jnp.asarray(sp[None]),
             "idx": jnp.zeros((1, b), jnp.int32),
         }
         pos = jnp.asarray([3, 0])
@@ -353,6 +361,31 @@ class TestCompactTreeCache:
         np.testing.assert_array_equal(sp1[:5], [0, -1, -1, -1, -1])
         np.testing.assert_array_equal(sp1[5:], np.arange(5, L))
         np.testing.assert_array_equal(np.asarray(out["idx"]), 0)  # rollback's
+
+    def test_identity_window_is_noop(self):
+        """A slot that took no part in the verify step (free, or mid-chunked-
+        prefill) is passed sel=identity and take=n: its window — live data,
+        unwritten -1 slot_pos entries included — must come back byte-for-
+        byte unchanged (regression: take=0 used to stamp slot_pos=-1 over a
+        prefilling slot's live prefix)."""
+        b, L, n = 1, 10, 4
+        rng = np.random.default_rng(3)
+        sp = np.where(np.arange(L) < 6, np.arange(L), -1).astype(np.int32)
+        cache = {
+            "k": jnp.asarray(rng.normal(size=(1, b, L, 1, 1)).astype(np.float32)),
+            "slot_pos": jnp.asarray(sp[None, None]),
+            "idx": jnp.full((1, b), 6, jnp.int32),
+        }
+        out = compact_tree_cache(
+            cache,
+            jnp.asarray([0]),
+            jnp.arange(n, dtype=jnp.int32)[None],
+            jnp.asarray([n]),
+        )
+        for key in ("k", "slot_pos", "idx"):
+            np.testing.assert_array_equal(
+                np.asarray(out[key]), np.asarray(cache[key])
+            )
 
 
 # --------------------------------------------------------------------------
