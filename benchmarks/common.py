@@ -10,13 +10,41 @@ headline numbers — e.g. the gemm fusion speedup — are tracked across PRs.
 """
 from __future__ import annotations
 
+import datetime
 import json
+import subprocess
 import time
 
 import jax
 
 #: rows buffered by emit(); flushed per-suite by write_results()
 _ROWS: list[dict] = []
+
+
+def run_metadata() -> dict:
+    """Provenance stamp for every BENCH_*.json: git sha, jax version, device
+    kind/platform, UTC timestamp — so the perf trajectory across PRs is
+    attributable to a code state and a host. Each probe degrades to None
+    rather than failing a benchmark run."""
+    meta: dict = {
+        "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+    }
+    try:
+        meta["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001 — not a git checkout / no git binary
+        meta["git_sha"] = None
+    try:
+        meta["device_kind"] = jax.devices()[0].device_kind
+        meta["device_count"] = jax.device_count()
+    except Exception:  # noqa: BLE001 — backend init failure
+        meta["device_kind"] = None
+    return meta
 
 
 def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> float:
@@ -83,6 +111,7 @@ def write_results(suite: str, path: str | None = None) -> str | None:
     payload = {
         "suite": suite,
         "backend": jax.default_backend(),
+        "meta": run_metadata(),
         "rows": rows,
     }
     with open(path, "w") as f:

@@ -1,0 +1,163 @@
+"""M × impl crossover table — the CI-tracked perf surface for ROADMAP item 1.
+
+The paper's headline claim is that the *vector* LUT beats the scalar LUT
+precisely in multi-token (parallel-M) regimes; BENCH_gemm.json currently
+shows that inverted on this host. This benchmark makes the crossover
+explicit and gate-able: for every M ∈ {1, 4, 16, 32, 64, 128} it times each
+GeMM impl on a fixed layer shape, names the **winner per M row**, and emits
+
+  * ``BENCH_crossover.json`` (via benchmarks.common, with run metadata) —
+    the committed baseline ``results/check_regression.py`` gates against;
+  * ``results/crossover.md`` — a human-readable winner table.
+
+Impls (paper §5.1 vocabulary):
+  vlut        — core.vlut.vlut_gemm: the vector-LUT reference (unified table
+                per token tile, streamed lookups)
+  vlut_packed — kernels.vlut_mpgemm: the packed serving path (fused
+                single-pass kernel on TPU, streamed XLA decode elsewhere) —
+                what serve/engine.py actually dispatches
+  scalar_lut  — core.baselines.scalar_lut_gemm: T-MAC-style per-token tables
+  mad_dense   — core.baselines.mad_gemm: llama.cpp-style dequant + f32 MAD
+  mad_int8    — core.baselines.mad_gemm_int8: bitnet.cpp-style int8 MAD
+
+Winner rows carry bytes/FLOPs: parsed from the winner's optimized HLO
+(roofline.hlo_stats — trip-count-aware, the ground truth) with the analytic
+roofline.analysis.mpgemm_cost as fallback, so achieved GB/s / GFLOP/s ride
+along in the JSON for the bandwidth-crossover analysis.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    mad_gemm,
+    mad_gemm_int8,
+    pack_weight,
+    scalar_lut_gemm,
+    ternary_quantize,
+    vlut_gemm,
+)
+from repro.kernels import vlut_mpgemm
+from repro.roofline.analysis import mpgemm_cost
+from repro.roofline.hlo_stats import parse_hlo_stats
+from .common import emit, time_paired, write_results
+
+#: the M sweep the acceptance gate requires a winner for
+MS = (1, 4, 16, 32, 64, 128)
+#: (tag, M_out, K) layer shapes; quick keeps one edge-scale cell
+SHAPES = [
+    ("edge-m", 512, 2048),
+    ("llama3-8b", 1024, 4096),
+]
+
+
+def _impls(pw, pw_i2):
+    # mirror the serving dispatch (kernels.ops.ternary_matmul): the fused
+    # Pallas decode kernel on TPU, the streamed XLA path elsewhere
+    packed_impl = "decode" if jax.default_backend() == "tpu" else "xla"
+    return {
+        "vlut": functools.partial(vlut_gemm, pw_i2),
+        "vlut_packed": functools.partial(vlut_mpgemm, pw, impl=packed_impl),
+        "scalar_lut": functools.partial(scalar_lut_gemm, pw_i2),
+        "mad_dense": functools.partial(mad_gemm, pw_i2),
+        "mad_int8": functools.partial(mad_gemm_int8, pw_i2),
+    }
+
+
+def _winner_cost(fn, a, m_out: int, k: int, m_tokens: int):
+    """(flops, bytes) of one winner call: HLO-parsed when the impl lowers
+    cleanly, analytic mpgemm_cost otherwise."""
+    try:
+        text = jax.jit(fn).lower(a).compile().as_text()
+        st = parse_hlo_stats(text)
+        if st.dot_flops > 0:
+            return st.dot_flops, st.traffic_bytes, "hlo"
+    except Exception:  # noqa: BLE001 — fall back to the analytic model
+        pass
+    flops, bytes_ = mpgemm_cost(m_out, k, m_tokens, g=4)
+    return flops, bytes_, "analytic"
+
+
+def run(quick: bool = True):
+    shapes = SHAPES[:1] if quick else SHAPES
+    rng = np.random.default_rng(0)
+    table: list[dict] = []
+    for tag, m_out, k in shapes:
+        w = rng.standard_normal((m_out, k)).astype(np.float32)
+        tw = ternary_quantize(jnp.asarray(w))
+        pw = pack_weight(tw.values, tw.scale, "auto")
+        pw_i2 = pack_weight(tw.values, tw.scale, "i2")
+        fns = _impls(pw, pw_i2)
+        for m in MS:
+            a = jnp.asarray(rng.standard_normal((k, m)).astype(np.float32))
+            secs = time_paired(fns, a, rounds=5 if quick else 9, calls=2)
+            for name, s in secs.items():
+                emit(
+                    f"crossover/{tag}_{m_out}x{k}/M{m}/{name}", s,
+                    f"{1.0 / s:.1f} runs/s",
+                    impl=name, m_tokens=m, m_out=m_out, k=k,
+                )
+            ranked = sorted(secs.items(), key=lambda kv: kv[1])
+            (win, win_s), (second, second_s) = ranked[0], ranked[1]
+            flops, bytes_, src = _winner_cost(
+                fns[win], a, m_out, k, m
+            )
+            emit(
+                f"crossover/{tag}_{m_out}x{k}/M{m}/winner", win_s,
+                f"{win} {second_s / win_s:.2f}x-vs-{second}",
+                winner=win, runner_up=second, margin=second_s / win_s,
+                m_tokens=m, m_out=m_out, k=k,
+                flops=flops, traffic_bytes=bytes_, cost_source=src,
+                achieved_gflops=flops / win_s / 1e9,
+                achieved_gbps=bytes_ / win_s / 1e9,
+            )
+            table.append(dict(
+                shape=f"{tag} {m_out}x{k}", m=m, winner=win,
+                margin=second_s / win_s,
+                **{n: 1.0 / s for n, s in secs.items()},
+            ))
+    _write_markdown(table)
+    write_results("crossover")
+    return table
+
+
+def _write_markdown(table: list[dict], path: str = "results/crossover.md"):
+    """Winner table (runs/s per impl, winner bolded) for the PR surface."""
+    if not table:
+        return
+    impls = [n for n in ("vlut", "vlut_packed", "scalar_lut", "mad_dense",
+                         "mad_int8") if n in table[0]]
+    lines = [
+        "# GeMM crossover: winner per (shape, M)",
+        "",
+        f"Backend: `{jax.default_backend()}` — runs/s per impl; "
+        "**winner** per row. Regenerate: `python -m benchmarks.crossover`.",
+        "",
+        "| shape | M | " + " | ".join(impls) + " | winner (margin) |",
+        "|---|---|" + "---|" * (len(impls) + 1),
+    ]
+    for row in table:
+        cells = []
+        for n in impls:
+            v = f"{row[n]:.1f}"
+            cells.append(f"**{v}**" if n == row["winner"] else v)
+        lines.append(
+            f"| {row['shape']} | {row['m']} | " + " | ".join(cells)
+            + f" | {row['winner']} ({row['margin']:.2f}x) |"
+        )
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="all shapes")
+    args = ap.parse_args()
+    run(quick=not args.full)

@@ -9,6 +9,7 @@ Mapping to the paper:
   decode_bench     Fig. 11 / §5.3.2   parallel decode + continuous batching
   spec_bench       §5.3 multi-token   speculative decoding: K×batch sweep +
                                       scalar-vs-vector verify GeMMs
+  crossover        ROADMAP item 1     M × impl winner table (CI-gated)
   breakdown_bench  Tables 1 & 5       stage time breakdown
   ablation_bench   Fig. 12 / §5.5     technique ablation + tile sweep
   packing_bench    Table 3 / §3.3     bpw compactness & shape support
@@ -29,6 +30,7 @@ def main() -> None:
     from . import (
         ablation_bench,
         breakdown_bench,
+        crossover,
         decode_bench,
         gemm_bench,
         packing_bench,
@@ -39,6 +41,7 @@ def main() -> None:
 
     suites = {
         "gemm": gemm_bench,
+        "crossover": crossover,
         "prefill": prefill_bench,
         "decode": decode_bench,
         "spec": spec_bench,

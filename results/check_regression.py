@@ -1,0 +1,128 @@
+"""CI regression gate over BENCH_*.json files.
+
+  python -m results.check_regression --baseline-dir /tmp/bench_baseline \
+      --current-dir . [--threshold 0.15] [--pattern crossover/]
+
+Compares every BENCH_*.json present in both directories row-by-row (rows are
+matched by ``name``):
+
+  * timing rows: fail when ``us_per_call`` regresses by more than
+    ``--threshold`` (relative; default 15%, the ISSUE-7 gate);
+  * crossover ``.../winner`` rows: the winner *identity* is compared instead
+    of its time — a flipped winner is the regression the crossover table
+    exists to catch (fail under ``--strict-winners``, warn otherwise, since
+    near-tied cells legitimately flip between runs).
+
+Rows present on only one side are reported but never fail the gate (new
+benchmarks land without a baseline; retired ones disappear). Absolute wall
+times are host-dependent — the committed baseline should come from the same
+class of runner as CI (the nightly job re-commits nothing; it compares
+against the checked-in file and uploads the fresh run as an artifact).
+
+Exit status: 0 clean, 1 regression(s), 2 usage/IO error.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload.get("rows", []) if "name" in r}
+
+
+def compare_suite(
+    base: dict[str, dict], cur: dict[str, dict], *, threshold: float,
+    pattern: str, strict_winners: bool,
+) -> tuple[list[str], list[str]]:
+    """→ (failures, warnings) for one suite's row maps."""
+    failures, warnings = [], []
+    for name in sorted(base.keys() & cur.keys()):
+        if pattern and pattern not in name:
+            continue
+        b, c = base[name], cur[name]
+        if name.endswith("/winner"):
+            bw, cw = b.get("winner"), c.get("winner")
+            if bw and cw and bw != cw:
+                msg = f"{name}: winner flipped {bw} -> {cw}"
+                (failures if strict_winners else warnings).append(msg)
+            continue
+        b_us, c_us = b.get("us_per_call", 0), c.get("us_per_call", 0)
+        if b_us <= 0 or c_us <= 0:
+            continue
+        rel = c_us / b_us - 1.0
+        if rel > threshold:
+            failures.append(
+                f"{name}: {b_us:.1f} -> {c_us:.1f} us/call "
+                f"(+{100 * rel:.1f}% > {100 * threshold:.0f}%)"
+            )
+    only_base = sorted(base.keys() - cur.keys())
+    only_cur = sorted(cur.keys() - base.keys())
+    if only_base:
+        warnings.append(f"{len(only_base)} baseline row(s) missing from "
+                        f"current (first: {only_base[0]})")
+    if only_cur:
+        warnings.append(f"{len(only_cur)} new row(s) without baseline "
+                        f"(first: {only_cur[0]})")
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current-dir", required=True,
+                    help="directory holding the freshly produced BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative us_per_call regression that fails (0.15)")
+    ap.add_argument("--pattern", default="",
+                    help="only gate rows whose name contains this substring")
+    ap.add_argument("--strict-winners", action="store_true",
+                    help="a flipped crossover winner fails (default: warns)")
+    args = ap.parse_args(argv)
+
+    base_files = {
+        os.path.basename(p): p
+        for p in glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json"))
+    }
+    cur_files = {
+        os.path.basename(p): p
+        for p in glob.glob(os.path.join(args.current_dir, "BENCH_*.json"))
+    }
+    shared = sorted(base_files.keys() & cur_files.keys())
+    if not shared:
+        print("check_regression: no BENCH_*.json common to both dirs",
+              file=sys.stderr)
+        return 2
+
+    all_failures: list[str] = []
+    for fname in shared:
+        try:
+            base = load_rows(base_files[fname])
+            cur = load_rows(cur_files[fname])
+        except (OSError, ValueError) as e:
+            print(f"check_regression: cannot read {fname}: {e}",
+                  file=sys.stderr)
+            return 2
+        failures, warnings = compare_suite(
+            base, cur, threshold=args.threshold, pattern=args.pattern,
+            strict_winners=args.strict_winners,
+        )
+        status = "FAIL" if failures else "ok"
+        print(f"[{status}] {fname}: {len(base)} baseline rows, "
+              f"{len(failures)} regression(s), {len(warnings)} warning(s)")
+        for w in warnings:
+            print(f"  warn: {w}")
+        for f in failures:
+            print(f"  FAIL: {f}")
+        all_failures += failures
+    return 1 if all_failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,6 +36,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.core.packing import PackedWeight
 from repro.core.quantize import act_quant_tokens, act_token_scale
 from . import autotune
@@ -368,6 +369,25 @@ def segment_mpgemm(
     )
 
 
+def _peek_tiles(pw: PackedWeight, n_tokens: int, impl: str, fusion: str,
+                interpret: bool):
+    """Best-effort cached-tile lookup for the dispatch trace annotation (the
+    first segment's tiles; 'heuristic' when the autotuner has no measured
+    winner). Never tunes — this runs on the dispatch path."""
+    if impl == "xla":
+        return None
+    segs = _segments(pw)
+    if not segs:
+        return None
+    packed, _, _, g = segs[0]
+    backend = "interpret" if interpret else jax.default_backend()
+    hit = autotune.default_cache().get(autotune.cache_key(
+        g, impl, packed.shape[0], packed.shape[1], n_tokens,
+        backend=backend, fused=fusion == "fused",
+    ))
+    return hit if hit is not None else "heuristic"
+
+
 def ternary_matmul(
     pw: PackedWeight,
     x: jax.Array,
@@ -392,8 +412,23 @@ def ternary_matmul(
     fusion = fusion if fusion is not None else cfg.fusion
     lead = x.shape[:-1]
     a = x.reshape(-1, x.shape[-1]).T                                 # (K, N) token-minor
-    out = vlut_mpgemm(
-        pw, a, impl=impl, interpret=cfg.interpret, out_dtype=x.dtype,
-        fusion=fusion,
-    )                                                                # (M, N)
+    # observability hook: inside a jit this python body runs at *trace* time
+    # only, so the span fires once per compiled shape (duration = host-side
+    # dispatch/trace cost) with the (M, N, K, impl, fusion, tile) args that
+    # make slow ticks attributable to kernel shape choices. Eager calls get
+    # a true per-call span. See repro.obs / docs/observability.md.
+    o = obs_mod.current()
+    if o is not None:
+        span = o.mpgemm_span(
+            m_tokens=a.shape[1], k=a.shape[0], n_out=pw.M, impl=impl,
+            fusion=fusion,
+            tiles=_peek_tiles(pw, a.shape[1], impl, fusion, cfg.interpret),
+        )
+    else:
+        span = contextlib.nullcontext()
+    with span:
+        out = vlut_mpgemm(
+            pw, a, impl=impl, interpret=cfg.interpret, out_dtype=x.dtype,
+            fusion=fusion,
+        )                                                            # (M, N)
     return out.T.reshape(*lead, pw.M)

@@ -131,7 +131,7 @@ def run_cell(
                    reason="full-attention arch: long_500k N/A (DESIGN.md §4)")
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     mesh = (
         make_small_mesh(multi_pod=multi_pod) if small_mesh
         else make_production_mesh(multi_pod=multi_pod)
@@ -177,9 +177,9 @@ def run_cell(
                 )
 
             lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
-            t1 = time.time()
+            t1 = time.perf_counter()
             compiled = lowered.compile()
-            t2 = time.time()
+            t2 = time.perf_counter()
 
         cost = compiled.cost_analysis() or {}
         if isinstance(cost, (list, tuple)):

@@ -13,14 +13,22 @@ the first depths) in one flattened pass, adding a nodes/step column.
 batched mixed step carrying every prefilling slot's next N-token chunk plus
 the decode rows, so the Vec-LUT kernels see parallel tokens every tick;
 --token-budget caps the real tokens scheduled per tick.
+
+Observability (repro.obs) is on by default (--no-obs disables): the periodic
+stats line (--stats-interval S) and the summary's latency/acceptance columns
+read from the metrics registry — the single export surface synced from the
+engine's counters — and --metrics-out/--trace-out dump the Prometheus-style
+JSON metrics snapshot and a Perfetto-loadable trace on exit.
 """
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import encdec_init, init_lm, pack_params
+from repro.obs import ObsConfig
 from repro.serve import ContinuousBatchingScheduler, Engine, Request
 
 
@@ -52,6 +60,15 @@ def main():
     ap.add_argument("--token-budget", type=int, default=0,
                     help="cap on real tokens scheduled per chunked tick "
                          "(0 = unlimited; needs --prefill-chunk)")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the observability layer (metrics + trace)")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="print a registry-backed stats line every S seconds "
+                         "while serving (0 = off)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the JSON metrics snapshot here on exit")
+    ap.add_argument("--trace-out", default="",
+                    help="write the Perfetto trace_event JSON here on exit")
     args = ap.parse_args()
     if (args.spec_adaptive or args.spec_tree) and not args.spec_k:
         ap.error("--spec-adaptive/--spec-tree require --spec-k N (N >= 1)")
@@ -59,6 +76,10 @@ def main():
         ap.error("--token-budget requires --prefill-chunk N (N >= 1)")
     if args.spec_adaptive and args.spec_tree:
         ap.error("--spec-tree and --spec-adaptive are mutually exclusive")
+    if args.no_obs and (args.stats_interval or args.metrics_out
+                        or args.trace_out):
+        ap.error("--no-obs conflicts with --stats-interval/--metrics-out/"
+                 "--trace-out")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     init = encdec_init if cfg.family == "encdec" else init_lm
@@ -76,10 +97,15 @@ def main():
         )
         spec = SpecConfig(k=args.spec_k, adaptive_k=args.spec_adaptive,
                           tree=tree)
+    obs_cfg = None if args.no_obs else ObsConfig(
+        metrics_out=args.metrics_out or None,
+        trace_out=args.trace_out or None,
+    )
     engine = Engine(
         params, cfg, max_slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, spec=spec,
         prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
+        obs=obs_cfg,
     )
     sched = ContinuousBatchingScheduler(engine)
     rng = np.random.default_rng(0)
@@ -94,7 +120,21 @@ def main():
         for i in range(args.requests)
     ]
     sched.submit(reqs)
+    obs = engine.obs
+    t_serve = time.perf_counter()
+    if args.stats_interval:
+        # registry-backed periodic logging: tick manually, report from the
+        # metric objects (the gauges/counters obs.on_tick syncs each tick)
+        next_at = time.perf_counter() + args.stats_interval
+        while sched.queue or engine.has_work:
+            sched.tick()
+            if time.perf_counter() >= next_at:
+                print(f"[obs] {obs.stats_line()}", flush=True)
+                next_at = time.perf_counter() + args.stats_interval
     stats = sched.run_to_completion()
+    # the manual tick loop's work lands in this run's token counters, so its
+    # wall time must land in the run's clock too or tok/s is inflated
+    stats.wall_s = time.perf_counter() - t_serve
     spec_cols = (
         f" accept={stats.acceptance_rate:.2f} "
         f"tok/step={stats.decode_tokens_per_step:.2f}"
@@ -111,17 +151,32 @@ def main():
         f" chunk_steps={stats.chunk_steps} pad={stats.prefill_pad_tokens}"
         if args.prefill_chunk else ""
     )
-    # no TTFT events (nothing emitted a first token) → omit, never a fake 0
-    ttft_col = (
-        f" ttft_median={1e3 * float(np.median(stats.ttft_s)):.1f} ms"
-        if stats.ttft_s else ""
-    )
+    # latency columns come from the registry histograms when obs is on (the
+    # single latency surface — p50/p95 interpolated from the bucket counts);
+    # the --no-obs fallback keeps the ad-hoc median over ServeStats events.
+    # Either way: no TTFT events → omit the column, never a fake 0.
+    if obs.enabled and obs.h_ttft.count:
+        ttft_col = (
+            f" ttft_p50={1e3 * obs.h_ttft.percentile(0.5):.1f}ms"
+            f" p95={1e3 * obs.h_ttft.percentile(0.95):.1f}ms"
+        )
+        if obs.h_tpot.count:
+            ttft_col += f" tpot_p50={1e3 * obs.h_tpot.percentile(0.5):.1f}ms"
+        if obs.s_eff_m.count:
+            ttft_col += f" eff_m={obs.s_eff_m.mean:.1f}"
+    else:
+        ttft_col = (
+            f" ttft_median={1e3 * float(np.median(stats.ttft_s)):.1f} ms"
+            if stats.ttft_s else ""
+        )
     print(
         f"completed={stats.completed}/{args.requests} "
         f"throughput={stats.throughput_tok_s:.1f} tok/s "
         f"(prefill {stats.prefill_tok_s:.1f}, decode {stats.decode_tok_s:.1f})"
         f"{ttft_col}{spec_cols}{chunk_cols}{rej_cols}"
     )
+    for path in obs.finalize():
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

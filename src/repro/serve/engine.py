@@ -82,6 +82,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
 from repro.models import compact_tree_cache, decode_step as model_decode
@@ -93,7 +94,10 @@ from .sampling import accept_speculative, accept_tree, sample
 
 
 # single definitions of the speculative metrics, shared by Engine (live
-# counters) and ServeStats (per-run snapshot) so the two can never diverge
+# counters) and ServeStats (per-run snapshot) so the two can never diverge.
+# The third consumer — the repro.obs metrics registry — is synced *from* the
+# engine's live counters at tick boundaries (obs.Obs.on_tick), so enabling
+# observability adds an export surface without a parallel set of counters.
 def spec_acceptance_rate(accepted_tokens: int, drafted_tokens: int) -> float:
     """Fraction of drafted tokens the target model accepted."""
     return accepted_tokens / drafted_tokens if drafted_tokens else 0.0
@@ -171,10 +175,22 @@ class Engine:
         spec: SpecConfig | None = None,
         prefill_chunk: int = 0,
         token_budget: int = 0,
+        obs: "obs_mod.ObsConfig | obs_mod.Obs | None" = None,
     ):
         self.params = params
         self.cfg = cfg
         self.mode = mode
+        # observability: the null instance is free (every method early-
+        # returns); an enabled Obs also installs itself for the kernel-side
+        # dispatch hooks (ops.ternary_matmul / autotune.tune)
+        if obs is None:
+            self.obs = obs_mod.NULL_OBS
+        elif isinstance(obs, obs_mod.Obs):
+            self.obs = obs
+        else:
+            self.obs = obs_mod.Obs(obs)
+        if self.obs.enabled:
+            obs_mod.install(self.obs)
         # mpGeMM routing for every BitLinear this engine traces: by default
         # the fused single-pass kernel on TPU / streamed XLA elsewhere; the
         # knobs force e.g. the interpreted fused path for CPU validation.
@@ -386,6 +402,8 @@ class Engine:
         outright when max_new_tokens=1 asked for nothing more."""
         req.generated.append(first_tok)
         req.t_first_token = now
+        if req.t_submit:
+            self.obs.observe_ttft(now - req.t_submit)
         self.last_token = self.last_token.at[slot, 0].set(first_tok)
         if len(req.generated) >= req.max_new_tokens:
             # prefill already produced everything asked for (max_new_tokens=1)
@@ -423,6 +441,12 @@ class Engine:
     def _finish_slot(self, slot: int, req: Request, now: float):
         req.done = True
         req.t_done = now
+        # TPOT = mean inter-token gap after the first token (undefined for
+        # single-token requests, which finish in _start_decoding anyway)
+        if len(req.generated) > 1 and req.t_first_token:
+            self.obs.observe_tpot(
+                (now - req.t_first_token) / (len(req.generated) - 1)
+            )
         self.active[slot] = False
         self.slot_free[slot] = True
         del self.slot_req[slot]
@@ -488,6 +512,7 @@ class Engine:
         are mandatory and count first, then prefill chunks are granted FCFS
         (admission order); at least one chunk always advances so prefill
         can never starve."""
+        _t0 = time.perf_counter() if self.obs.enabled else 0.0
         chunk = self.prefill_chunk
         include_decode = self._decode_rides and bool(self.active.any())
         used = int(self.active.sum()) if include_decode else 0
@@ -544,6 +569,13 @@ class Engine:
             if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
                 self._finish_slot(slot, req, now)
         self.cache = rollback_cache(cache, jnp.asarray(new_idx))
+        if self.obs.enabled:
+            # used = real tokens this step carried (chunk tokens + decode
+            # rows) — the effective M the batched mpGeMM dispatch saw
+            self.obs.step_event(
+                "chunk", _t0, m_real=used, m_padded=self.max_slots * chunk,
+                prefills=len(chosen), decodes=len(decode_slots),
+            )
 
     def decode_once(self):
         """One batched decode step over every active slot. With spec enabled
@@ -555,6 +587,8 @@ class Engine:
         if self.spec is not None:
             return self._decode_spec()
         self.decode_steps += 1
+        _t0 = time.perf_counter() if self.obs.enabled else 0.0
+        _m_active = int(self.active.sum())   # rows finishing mid-loop still counted
         # the jit'd decode step advances EVERY slot's idx by 1 and scatters
         # a (garbage) token at every slot's frontier; with slots mid-chunked-
         # prefill that drift must be undone — the restored frontier index is
@@ -577,6 +611,10 @@ class Engine:
                 self._finish_slot(slot, req, now)
         if restore:
             self.cache = rollback_cache(self.cache, jnp.asarray(new_idx))
+        if self.obs.enabled:
+            self.obs.step_event(
+                "decode", _t0, m_real=_m_active, m_padded=self.max_slots,
+            )
 
     def _choose_k_eff(self) -> np.ndarray:
         """Per-slot effective draft length for this step: spec.k everywhere
@@ -629,6 +667,8 @@ class Engine:
         drafting k_eff < k real tokens pads the rest of its row, and the
         draft_mask handed to accept_speculative stops acceptance at k_eff
         (a k_eff=0 row is a plain last-token decode)."""
+        _t0 = time.perf_counter() if self.obs.enabled else 0.0
+        active0 = self.active.copy()         # slots finishing mid-loop flip it
         k = self.spec.k
         contexts, pos = self._gather_contexts()
         k_eff = self._choose_k_eff()
@@ -684,6 +724,12 @@ class Engine:
         self.decode_steps += 1
         self.last_token = jnp.asarray(new_last)
         self.cache = rollback_cache(cache, jnp.asarray(new_idx))
+        if self.obs.enabled:
+            # every verify row carries k_eff + 1 real candidate tokens
+            self.obs.step_event(
+                "verify", _t0, m_real=int(np.sum(k_eff[active0] + 1)),
+                m_padded=self.max_slots * (k + 1), k=k,
+            )
 
     def _decode_spec_tree(self):
         """One tree-speculative decode step: the drafter proposes a token
@@ -694,6 +740,8 @@ class Engine:
         winning path's cache entries are compacted back onto contiguous
         slots (compact_tree_cache), and the idx rolls back to the accepted
         depth. Greedy output is token-for-token plain decode."""
+        _t0 = time.perf_counter() if self.obs.enabled else 0.0
+        _m_active = int(self.active.sum())
         tree = self._tree
         n_nodes = tree.n_nodes
         contexts, pos = self._gather_contexts()
@@ -755,6 +803,11 @@ class Engine:
             cache, jnp.asarray(pos), jnp.asarray(sel), jnp.asarray(take_arr)
         )
         self.cache = rollback_cache(self.cache, jnp.asarray(new_idx))
+        if self.obs.enabled:
+            self.obs.step_event(
+                "tree_verify", _t0, m_real=_m_active * n_nodes,
+                m_padded=self.max_slots * n_nodes, n_nodes=n_nodes,
+            )
 
     def reset_stats(self):
         """Zero the token/acceptance counters (e.g. after a warmup run, so a

@@ -20,6 +20,8 @@ import time
 from collections import deque
 from typing import Iterable
 
+import jax
+
 from .engine import (
     Engine,
     Request,
@@ -138,6 +140,8 @@ class ContinuousBatchingScheduler:
         prefilling or decoding (every admission satisfied by prefill alone)
         skips the batched step instead of burning a dispatch on an empty
         batch."""
+        obs = self.engine.obs
+        _t0 = time.perf_counter() if obs.enabled else 0.0
         multi = bool(self.engine.prefill_chunk)
         while self.queue:
             head = self.queue[0]
@@ -161,6 +165,20 @@ class ContinuousBatchingScheduler:
         for r in before:
             if r.done:                 # finished this step (decode or final
                 self.completed.append(r)  # chunk with max_new_tokens=1)
+        if obs.enabled:
+            # end-of-tick state sync: queue depth + slot occupancy gauges,
+            # counter mirrors — the registry reads engine state, never
+            # double-counts it
+            obs.on_tick(
+                self.engine, queue_depth=len(self.queue),
+                completed=len(self.completed), rejected=len(self.rejected),
+            )
+            obs.tracer.complete(
+                "scheduler_tick", _t0,
+                args=dict(queue=len(self.queue),
+                          running=int(self.engine.active.sum()),
+                          prefilling=len(self.engine.prefilling)),
+            )
 
     def run_to_completion(self, max_ticks: int = 100_000) -> ServeStats:
         """Drain the queue (≤ max_ticks); → ServeStats for this run.
@@ -182,6 +200,10 @@ class ContinuousBatchingScheduler:
         while pending() and ticks < max_ticks:
             self.tick()
             ticks += 1
+        # drain async dispatch before stopping the clock: per-tick host
+        # syncs (np.asarray on logits) cover most of it, but donated cache
+        # updates can still be in flight and would under-report wall time
+        jax.block_until_ready(self.engine.cache)
         wall = time.perf_counter() - t0
         # every request this scheduler has seen: finished (incl. by earlier
         # manual ticks), still in flight, and never admitted
