@@ -71,15 +71,16 @@ def run(quick: bool = True):
     batches = BATCHES[:3] if quick else BATCHES
 
     # ---- Fig 11: parallel decode throughput vs batch ----------------------
+    # one wrapper per fn outside the batch loop: each batch size is a fresh
+    # shape (one compile each) but the wrapper's cache survives the loop
+    prefill_fn = jax.jit(lambda p, c, t: prefill(p, t, c, cfg, mode="serve"))
+    decode_fn = jax.jit(lambda p, c, t: decode_step(p, t, c, cfg, mode="serve"))
     for b in batches:
         cache = init_cache(cfg, b, max_len=64)
         tok = jnp.asarray(rng.integers(0, cfg.vocab, (b, 16)), jnp.int32)
-        _, cache = jax.jit(lambda p, c, t: prefill(p, t, c, cfg, mode="serve"))(
-            params, cache, tok
-        )
+        _, cache = prefill_fn(params, cache, tok)
         one = jnp.asarray(rng.integers(0, cfg.vocab, (b, 1)), jnp.int32)
-        fn = jax.jit(lambda p, c, t: decode_step(p, t, c, cfg, mode="serve"))
-        sec = time_fn(fn, params, cache, one, warmup=1, repeats=5)
+        sec = time_fn(decode_fn, params, cache, one, warmup=1, repeats=5)
         emit(f"decode/batch{b}", sec, f"{b / sec:.1f} tok/s",
              batch=b, tok_s=b / sec)
 

@@ -13,8 +13,13 @@ matched by ``name``):
     exists to catch (fail under ``--strict-winners``, warn otherwise, since
     near-tied cells legitimately flip between runs).
 
-Rows present on only one side are reported but never fail the gate (new
-benchmarks land without a baseline; retired ones disappear). Absolute wall
+A baseline row missing from the current run FAILS the gate, as does a
+timing row whose baseline has ``us_per_call`` but whose current run does
+not: a tracked metric silently vanishing is exactly how a benchmark rots
+into measuring nothing. Retiring a benchmark is an explicit act — delete
+the row from the committed baseline in the same change. New rows without
+a baseline only warn (new benchmarks land before their baseline does).
+Absolute wall
 times are host-dependent — the committed baseline should come from the same
 class of runner as CI (the nightly job re-commits nothing; it compares
 against the checked-in file and uploads the fresh run as an artifact).
@@ -53,7 +58,13 @@ def compare_suite(
                 (failures if strict_winners else warnings).append(msg)
             continue
         b_us, c_us = b.get("us_per_call", 0), c.get("us_per_call", 0)
-        if b_us <= 0 or c_us <= 0:
+        if b_us <= 0:
+            continue            # baseline never tracked a time for this row
+        if c_us <= 0:
+            failures.append(
+                f"{name}: tracked metric us_per_call missing from current "
+                f"run (baseline {b_us:.1f} us/call)"
+            )
             continue
         rel = c_us / b_us - 1.0
         if rel > threshold:
@@ -61,11 +72,13 @@ def compare_suite(
                 f"{name}: {b_us:.1f} -> {c_us:.1f} us/call "
                 f"(+{100 * rel:.1f}% > {100 * threshold:.0f}%)"
             )
-    only_base = sorted(base.keys() - cur.keys())
+    only_base = sorted(
+        n for n in base.keys() - cur.keys() if not pattern or pattern in n
+    )
     only_cur = sorted(cur.keys() - base.keys())
-    if only_base:
-        warnings.append(f"{len(only_base)} baseline row(s) missing from "
-                        f"current (first: {only_base[0]})")
+    for name in only_base:
+        failures.append(f"{name}: baseline row missing from current run "
+                        f"(retire it by deleting the baseline row)")
     if only_cur:
         warnings.append(f"{len(only_cur)} new row(s) without baseline "
                         f"(first: {only_cur[0]})")

@@ -1,0 +1,52 @@
+"""repro.lint — JAX/Pallas-aware static analysis + runtime sanitizers.
+
+Static side: ``python -m repro.lint src/ tests/ benchmarks/`` runs the AST
+rules (R1 scatter modes, R2 recompile hazards, R3 host syncs, R4 timing,
+R5 Pallas geometry/VMEM; R0 verifies suppression justifications). Runtime
+side: `sanitize.enable_sanitizers` (strict JAX modes for the test lane) and
+`sanitize.CompileGuard` (zero-recompile steady-state assertion). Rule
+catalog and suppression syntax: docs/static_analysis.md.
+"""
+from __future__ import annotations
+
+# importing the rule modules registers them with core's registry
+from . import (  # noqa: F401
+    rules_hostsync,
+    rules_pallas,
+    rules_recompile,
+    rules_scatter,
+    rules_timing,
+)
+from .core import (  # noqa: F401
+    Finding,
+    LintModule,
+    lint_file,
+    lint_paths,
+    lint_source,
+    registered_rules,
+    report_json,
+    write_json,
+)
+from .sanitize import (  # noqa: F401
+    CompileGuard,
+    enable_sanitizers,
+    guard_entries,
+    restore_sanitizers,
+    sanitizers_requested,
+)
+
+__all__ = [
+    "Finding",
+    "LintModule",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "registered_rules",
+    "report_json",
+    "write_json",
+    "CompileGuard",
+    "enable_sanitizers",
+    "guard_entries",
+    "restore_sanitizers",
+    "sanitizers_requested",
+]

@@ -1,0 +1,55 @@
+"""CLI: ``python -m repro.lint src/ tests/ benchmarks/ [--json out.json]``.
+
+Exit status: 0 clean, 1 findings (including bad suppressions), 2 usage.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .core import lint_paths, registered_rules, report_json, write_json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="JAX/Pallas-aware static analysis for this repo "
+                    "(rule catalog: docs/static_analysis.md)",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint (default: src tests "
+                         "benchmarks)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write a machine-readable JSON report")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, desc in registered_rules().items():
+            print(f"{rid}: {desc}")
+        return 0
+
+    paths = args.paths or ["src", "tests", "benchmarks"]
+    select = (
+        {s.strip() for s in args.select.split(",") if s.strip()}
+        if args.select else None
+    )
+    findings, n_files = lint_paths(paths, select=select)
+    for f in findings:
+        print(f.format())
+    if args.json:
+        write_json(args.json, findings, n_files)
+    counts = report_json(findings, n_files)["counts"]
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(
+        f"repro.lint: {n_files} file(s), {len(findings)} finding(s)"
+        + (f" [{summary}]" if summary else "")
+    )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,153 @@
+"""R3 — host-sync calls inside engine/scheduler hot-loop bodies.
+
+``float(x)``, ``int(x)``, ``x.item()``, ``np.asarray(x)``, ``bool(x)`` on a
+device array block the host until the value materializes; inside the
+scheduler tick loop each one serializes the pipeline per element. The same
+goes for a ``block_until_ready`` that sits inside a per-item loop (one
+barrier per element instead of one per batch).
+
+Scope and precision:
+
+* Only the serving hot-path modules (`HOT_PATH_SUFFIXES`) are checked, and
+  only calls lexically inside a for/while body — one batched
+  ``np.asarray(device_result)`` at tick end is the correct pattern and is
+  not flagged.
+* ``int()``/``float()``/``bool()`` are *not* flagged when the argument's
+  base name was provably materialized to host numpy earlier in the same
+  function (assigned from an ``np.*`` call, or bound by iterating such a
+  value) — ``nxt = np.asarray(...); for s in ...: int(nxt[s])`` is the
+  batch-then-index idiom this rule exists to push code toward.
+* Anything the AST can't prove host-side (attribute state, helper-method
+  returns) stays flagged; genuinely-host sites carry a justified
+  suppression instead of a silent exemption.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .core import Finding, LintModule, rule
+
+#: modules where per-element host syncs are a throughput bug
+HOT_PATH_SUFFIXES = (
+    "serve/engine.py",
+    "serve/scheduler.py",
+)
+
+_SYNC_BUILTINS = {"float", "int", "bool"}
+_SYNC_METHODS = {"item", "tolist"}
+_SYNC_NP_FUNCS = {"asarray", "array"}
+#: calls whose result is host-resident numpy (never a device array)
+_HOST_PRODUCERS = {"np", "numpy"}
+
+
+def _base_name(node: ast.AST) -> str | None:
+    """Leftmost plain Name of a Name/Subscript/chained expression, or None
+    when the base is an attribute/call (origin unknowable locally)."""
+    while True:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Call) and isinstance(
+            node.func, ast.Attribute
+        ) and node.func.attr in ("copy", "astype", "reshape"):
+            node = node.func.value
+        else:
+            return None
+
+
+def _is_np_call(node: ast.AST) -> bool:
+    """np.<anything>(...) — asarray/zeros/arange/full/concatenate/..."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    while isinstance(f, ast.Attribute):
+        if isinstance(f.value, ast.Name) and f.value.id in _HOST_PRODUCERS:
+            return True
+        f = f.value if isinstance(f.value, ast.Attribute) else f.value
+        if not isinstance(f, ast.Attribute):
+            break
+    return False
+
+
+def _host_names(fn: ast.AST) -> set[str]:
+    """Names in `fn` provably bound to host numpy values (flow-insensitive:
+    one np.* assignment marks the name for the whole function — good enough
+    because the codebase never reuses a name for device and host data)."""
+    host: set[str] = set()
+    # pass 1: direct np.* assignments (incl. pairwise tuple assigns)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        pairs: list[tuple[ast.AST, ast.AST]] = []
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Tuple) and isinstance(
+                node.value, ast.Tuple
+            ) and len(tgt.elts) == len(node.value.elts):
+                pairs += list(zip(tgt.elts, node.value.elts))
+            else:
+                pairs.append((tgt, node.value))
+        for tgt, val in pairs:
+            if not isinstance(tgt, ast.Name):
+                continue
+            base = _base_name(val)
+            if _is_np_call(val) or (base is not None and base in host):
+                host.add(tgt.id)
+    # pass 2: loop/comprehension targets iterating a host value
+    for node in ast.walk(fn):
+        if isinstance(node, ast.For):
+            it, tgt = node.iter, node.target
+        elif isinstance(node, ast.comprehension):
+            it, tgt = node.iter, node.target
+        else:
+            continue
+        base = _base_name(it)
+        if base in host and isinstance(tgt, ast.Name):
+            host.add(tgt.id)
+    return host
+
+
+@rule("R3", "host-sync call (float()/.item()/np.asarray/block_until_ready) "
+            "inside an engine/scheduler loop body")
+def check_hostsync(mod: LintModule) -> Iterable[Finding]:
+    if not mod.path.replace("\\", "/").endswith(HOT_PATH_SUFFIXES):
+        return
+    host_cache: dict[ast.AST, set[str]] = {}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not mod.in_loop(node):
+            continue
+        f = node.func
+        desc = None
+        if isinstance(f, ast.Name) and f.id in _SYNC_BUILTINS and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant):
+                continue
+            fn = mod.enclosing_function(node)
+            if fn is not None:
+                if fn not in host_cache:
+                    host_cache[fn] = _host_names(fn)
+                if _base_name(arg) in host_cache[fn]:
+                    continue  # proven host numpy — no device round-trip
+            desc = f"`{f.id}(...)`"
+        elif isinstance(f, ast.Attribute) and f.attr in _SYNC_METHODS:
+            desc = f"`.{f.attr}()`"
+        elif (
+            isinstance(f, ast.Attribute)
+            and f.attr in _SYNC_NP_FUNCS
+            and isinstance(f.value, ast.Name)
+            and f.value.id in _HOST_PRODUCERS
+        ):
+            desc = f"`np.{f.attr}(...)`"
+        elif isinstance(f, ast.Attribute) and f.attr == "block_until_ready":
+            desc = "`block_until_ready()`"
+        if desc is None:
+            continue
+        yield Finding(
+            "R3", mod.path, node.lineno, node.col_offset,
+            f"{desc} inside a loop body on the serving hot path forces a "
+            f"per-element host sync — batch the transfer outside the loop "
+            f"(or justify: host-side data needs no device round-trip)",
+        )

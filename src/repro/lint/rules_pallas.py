@@ -1,0 +1,264 @@
+"""R5 — Pallas `pallas_call` structural + VMEM-budget checks.
+
+The paper's §3 layout/streaming techniques make the kernel launch geometry
+*checkable*: every BlockSpec index map must address exactly the grid axes,
+return one block coordinate per block-shape dimension, and the per-step VMEM
+working set implied by the enclosing entry point's default tile sizes must
+fit the autotuner's budget. All of this is visible in the AST:
+
+R5/index-arity    index_map lambda's non-default parameter count ≠ grid
+                  tuple length (a lambda with default-arg captures like
+                  ``lambda i, j, k, g=g: ...`` counts only i, j, k).
+R5/index-rank     index_map returns a tuple whose length ≠ the BlockSpec
+                  block-shape rank.
+R5/index-expr     an index expression uses something other than grid
+                  parameters, captured defaults, constants, and arithmetic
+                  (``//``, ``%``, ``+``, ``-``, ``*``) over them — calls or
+                  subscripts inside an index map defeat static bounds
+                  reasoning (and Mosaic's affine analysis).
+R5/operand-count  number of operands passed to the ``pallas_call(...)``
+                  result ≠ number of ``in_specs``.
+R5/grid-divisibility  when grid entries AND the matching block dims are both
+                  integer literals, the grid must cover the block exactly
+                  (flag ``grid=(3,)`` with ``BlockSpec((128,), ...)`` only
+                  when an operand dim literal disagrees — rarely statically
+                  decidable; checked when it is).
+R5/vmem-budget    the enclosing entry point's default (bm, bn, bkg) tile,
+                  run through `kernels.autotune.tile_vmem_bytes` for the
+                  supported ternary group sizes g ∈ {2, 3, 4}, exceeds
+                  `autotune.VMEM_BUDGET_BYTES`. `impl`/`fused` are inferred
+                  from the enclosing function's name (``lookup``/``decode``,
+                  ``fused``); entry points outside that naming scheme skip
+                  the budget check (the structural checks still apply).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .core import Finding, LintModule, rule
+
+_IDX_BINOPS = (ast.FloorDiv, ast.Mod, ast.Add, ast.Sub, ast.Mult)
+_SUPPORTED_G = (2, 3, 4)
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr == "pallas_call") or (
+        isinstance(f, ast.Name) and f.id == "pallas_call"
+    )
+
+
+def _kw(node: ast.Call, name: str) -> ast.AST | None:
+    for kw in node.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _blockspecs(spec_node: ast.AST | None) -> list[ast.Call]:
+    """BlockSpec(...) calls inside an in_specs list / a bare out_specs."""
+    out: list[ast.Call] = []
+    if spec_node is None:
+        return out
+    candidates = (
+        spec_node.elts if isinstance(spec_node, (ast.List, ast.Tuple))
+        else [spec_node]
+    )
+    for el in candidates:
+        if isinstance(el, ast.Call):
+            f = el.func
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else ""
+            )
+            if name == "BlockSpec":
+                out.append(el)
+    return out
+
+
+def _index_expr_ok(expr: ast.AST, allowed: set[str]) -> bool:
+    if isinstance(expr, ast.Constant):
+        return isinstance(expr.value, int)
+    if isinstance(expr, ast.Name):
+        return expr.id in allowed
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, _IDX_BINOPS):
+        return _index_expr_ok(expr.left, allowed) and _index_expr_ok(
+            expr.right, allowed
+        )
+    if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.USub):
+        return _index_expr_ok(expr.operand, allowed)
+    return False
+
+
+def _check_blockspec(
+    mod: LintModule, spec: ast.Call, grid_len: int | None, where: str
+) -> Iterable[Finding]:
+    shape_node = spec.args[0] if spec.args else None
+    imap = spec.args[1] if len(spec.args) > 1 else None
+    block_rank = (
+        len(shape_node.elts)
+        if isinstance(shape_node, (ast.Tuple, ast.List))
+        else None
+    )
+    if not isinstance(imap, ast.Lambda):
+        return
+    n_required = len(imap.args.args) - len(imap.args.defaults)
+    params = {a.arg for a in imap.args.args[:n_required]}
+    captured = {a.arg for a in imap.args.args[n_required:]}
+    if grid_len is not None and n_required != grid_len:
+        yield Finding(
+            "R5", mod.path, imap.lineno, imap.col_offset,
+            f"{where}: index_map takes {n_required} grid indices but the "
+            f"grid has {grid_len} axes — each grid axis must be a "
+            f"parameter (captures go in defaults)",
+        )
+    body = imap.body
+    returned = (
+        list(body.elts) if isinstance(body, (ast.Tuple, ast.List)) else [body]
+    )
+    if block_rank is not None and len(returned) != block_rank:
+        yield Finding(
+            "R5", mod.path, imap.lineno, imap.col_offset,
+            f"{where}: index_map returns {len(returned)} block "
+            f"coordinate(s) but the block shape has rank {block_rank}",
+        )
+    for expr in returned:
+        if not _index_expr_ok(expr, params | captured):
+            yield Finding(
+                "R5", mod.path, expr.lineno, expr.col_offset,
+                f"{where}: index expression `{mod.text(expr)}` is not "
+                f"affine in the grid indices (params/captures/constants "
+                f"and +,-,*,//,% only) — Mosaic cannot bound it "
+                f"statically",
+            )
+
+
+def _int_elts(node: ast.AST | None) -> list[int | None]:
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return []
+    return [
+        el.value if isinstance(el, ast.Constant) and isinstance(el.value, int)
+        else None
+        for el in node.elts
+    ]
+
+
+def _tile_defaults(fn: ast.FunctionDef) -> dict[str, int]:
+    """bm/bn/bkg keyword-default ints of the enclosing entry point."""
+    out: dict[str, int] = {}
+    kwonly = zip(fn.args.kwonlyargs, fn.args.kw_defaults)
+    pos = zip(reversed(fn.args.args), reversed(fn.args.defaults))
+    for arg, default in list(kwonly) + list(pos):
+        if (
+            arg is not None
+            and arg.arg in ("bm", "bn", "bkg")
+            and isinstance(default, ast.Constant)
+            and isinstance(default.value, int)
+        ):
+            out[arg.arg] = default.value
+    return out
+
+
+def _vmem_check(
+    mod: LintModule, call: ast.Call, fn: ast.FunctionDef
+) -> Iterable[Finding]:
+    name = fn.name.lower()
+    if "lookup" in name or "vlut" in name:
+        impl = "lookup"
+    elif "decode" in name or "mad" in name:
+        impl = "decode"
+    else:
+        return
+    tiles = _tile_defaults(fn)
+    if set(tiles) != {"bm", "bn", "bkg"}:
+        return
+    from repro.kernels.autotune import VMEM_BUDGET_BYTES, tile_vmem_bytes
+
+    fused = "fused" in name or _kw(call, "scratch_shapes") is not None
+    for g in _SUPPORTED_G:
+        need = tile_vmem_bytes(
+            g, impl, tiles["bm"], tiles["bn"], tiles["bkg"], fused=fused
+        )
+        if need > VMEM_BUDGET_BYTES:
+            yield Finding(
+                "R5", mod.path, call.lineno, call.col_offset,
+                f"default tile (bm={tiles['bm']}, bn={tiles['bn']}, "
+                f"bkg={tiles['bkg']}) of `{fn.name}` needs {need} B of "
+                f"VMEM at g={g} ({impl}, fused={fused}) — over the "
+                f"autotune budget of {VMEM_BUDGET_BYTES} B; shrink the "
+                f"default or route through autotune.get_tiles",
+            )
+            break  # one budget finding per call site is enough
+
+
+@rule("R5", "pallas_call geometry: index-map arity/rank/affinity vs grid "
+            "and BlockSpec, operand/in_specs count, default-tile VMEM "
+            "budget vs kernels.autotune")
+def check_pallas(mod: LintModule) -> Iterable[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or not _is_pallas_call(node):
+            continue
+        grid = _kw(node, "grid")
+        grid_len = (
+            len(grid.elts) if isinstance(grid, (ast.Tuple, ast.List)) else None
+        )
+        in_specs = _kw(node, "in_specs")
+        specs = _blockspecs(in_specs)
+        for i, spec in enumerate(specs):
+            yield from _check_blockspec(
+                mod, spec, grid_len, f"in_specs[{i}]"
+            )
+        for spec in _blockspecs(_kw(node, "out_specs")):
+            yield from _check_blockspec(mod, spec, grid_len, "out_specs")
+
+        # operand count vs in_specs
+        parent = mod.parents.get(node)
+        if (
+            isinstance(parent, ast.Call)
+            and parent.func is node
+            and isinstance(in_specs, (ast.List, ast.Tuple))
+            and len(specs) == len(in_specs.elts)  # all entries are BlockSpecs
+            and not any(
+                isinstance(a, ast.Starred) for a in parent.args
+            )
+        ):
+            if len(parent.args) != len(specs):
+                yield Finding(
+                    "R5", mod.path, parent.lineno, parent.col_offset,
+                    f"pallas_call invoked with {len(parent.args)} "
+                    f"operand(s) but in_specs declares {len(specs)} "
+                    f"BlockSpec(s)",
+                )
+
+        # literal grid ↔ literal block-shape coverage: with all three of
+        # grid entry, block dim, and out_shape dim known as ints, a grid
+        # that UNDER-covers the output (n_blocks · block < dim) leaves a
+        # tail no step ever writes. Only decidable for literal launches
+        # (tests/fixtures); the repo's cdiv-computed grids are skipped.
+        grid_ints = _int_elts(grid)
+        out_shape = _kw(node, "out_shape")
+        if grid_ints and isinstance(out_shape, ast.Call):
+            dims = _int_elts(out_shape.args[0] if out_shape.args else None)
+            for spec in _blockspecs(_kw(node, "out_specs")):
+                blk = _int_elts(spec.args[0] if spec.args else None)
+                if not dims or len(blk) != len(dims):
+                    continue
+                if len(grid_ints) != len(blk):
+                    continue
+                for n_blocks, b, d in zip(grid_ints, blk, dims):
+                    if None in (n_blocks, b, d) or b <= 0:
+                        continue
+                    if n_blocks * b < d:
+                        yield Finding(
+                            "R5", mod.path, spec.lineno, spec.col_offset,
+                            f"grid covers {n_blocks}×{b} elements of a "
+                            f"{d}-wide output dim — the tail is never "
+                            f"written",
+                        )
+
+        # default-tile VMEM budget of the enclosing entry point
+        fn = mod.enclosing_function(node)
+        while fn is not None and not isinstance(fn, ast.FunctionDef):
+            fn = mod.enclosing_function(fn)
+        if isinstance(fn, ast.FunctionDef):
+            yield from _vmem_check(mod, node, fn)

@@ -1,0 +1,217 @@
+"""R2 — jit recompile hazards.
+
+Three sub-patterns, one rule id (the finding message names the sub-pattern):
+
+R2/jit-in-loop      ``jax.jit(...)`` called inside a for/while body — each
+                    iteration builds a fresh wrapper with an empty compile
+                    cache, so every call retraces.
+R2/jit-immediate    ``jax.jit(fn)(args)`` — wrapper created and discarded in
+                    one expression; the compilation is never reused. (AOT
+                    ``.lower()``/``.compile()`` chains are exempt: there the
+                    throwaway wrapper is the point.)
+R2/traced-branch    Python ``if``/``while`` on a *parameter-derived value*
+                    inside a function decorated with ``@jit`` /
+                    ``@partial(jax.jit, ...)``. Under trace this raises a
+                    ConcretizationTypeError or — with static args — silently
+                    keys the compile cache on the value, recompiling per
+                    distinct value. Branching on trace-time statics
+                    (``.shape``, ``.ndim``, ``.dtype``, ``len()``,
+                    ``is None``, ``isinstance``) is fine and not flagged.
+R2/unhashable-static  a list/dict/set literal passed to a ``static_arg*``
+                    parameter of a jit'd call — unhashable statics raise at
+                    call time or defeat cache keying.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .core import Finding, LintModule, rule
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    return _call_name(node) == "jit"
+
+
+def _is_partial_jit(node: ast.Call) -> bool:
+    """``partial(jax.jit, ...)`` / ``functools.partial(jit, ...)``."""
+    if _call_name(node) != "partial" or not node.args:
+        return False
+    first = node.args[0]
+    return (isinstance(first, ast.Attribute) and first.attr == "jit") or (
+        isinstance(first, ast.Name) and first.id == "jit"
+    )
+
+
+def _jit_decorated(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Name) and dec.id == "jit":
+            return True
+        if isinstance(dec, ast.Attribute) and dec.attr == "jit":
+            return True
+        if isinstance(dec, ast.Call) and (
+            _is_jit_call(dec) or _is_partial_jit(dec)
+        ):
+            return True
+    return False
+
+
+def _static_argnames(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    """Names listed in static_argnames= of a jit/partial-jit decorator."""
+    out: set[str] = set()
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        if not (_is_jit_call(dec) or _is_partial_jit(dec)):
+            continue
+        for kw in dec.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) and isinstance(
+                        el.value, str
+                    ):
+                        out.add(el.value)
+    return out
+
+
+# trace-time-static callables: branching on these never concretizes a tracer
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "callable"}
+
+
+def _branch_is_static(test: ast.AST, params: set[str]) -> bool:
+    """True when every parameter reference in `test` flows through a
+    trace-time-static accessor (so the branch can't concretize a tracer)."""
+
+    def name_is_raw_param(n: ast.AST) -> bool:
+        return isinstance(n, ast.Name) and n.id in params
+
+    # walk, but stop descending below static accessors
+    def scan(n: ast.AST) -> bool:  # -> contains a raw (non-static) param use
+        if isinstance(n, ast.Attribute):
+            # attribute access on a param is presumed metadata: `.shape`/
+            # `.dtype` are trace-static, and this codebase's pytree params
+            # carry static fields (`pw.M`, `spec.k`) as plain attributes.
+            # The traced-branch bug class enters through raw names and
+            # subscript element reads, which still flag below.
+            return False
+        if isinstance(n, ast.Subscript):
+            # x.shape[0] handled by the Attribute case above; a raw
+            # subscript of a param is a traced element access
+            return scan(n.value) or scan(n.slice)
+        if isinstance(n, ast.Call):
+            fname = _call_name(n)
+            if fname in _STATIC_CALLS:
+                return False
+            return any(scan(a) for a in n.args) or any(
+                scan(k.value) for k in n.keywords
+            )
+        if isinstance(n, ast.Compare):
+            # `x is None` / `x is not None` is an identity check, not a
+            # concretization
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops):
+                return False
+            return scan(n.left) or any(scan(c) for c in n.comparators)
+        if name_is_raw_param(n):
+            return True
+        return any(scan(c) for c in ast.iter_child_nodes(n))
+
+    return not scan(test)
+
+
+def _aot_exempt(mod: LintModule, node: ast.Call) -> bool:
+    """jax.jit(fn).lower(...) / .compile() — AOT chains are deliberate."""
+    parent = mod.parents.get(node)
+    return isinstance(parent, ast.Attribute) and parent.attr in (
+        "lower", "compile", "trace",
+    )
+
+
+@rule("R2", "jit recompile hazard (jit-in-loop, throwaway jit wrapper, "
+            "traced-value Python branch, unhashable static arg)")
+def check_recompile(mod: LintModule) -> Iterable[Finding]:
+    # -- jit-in-loop and jit-immediate ------------------------------------
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_jit_call(node) or _is_partial_jit(node):
+            if _aot_exempt(mod, node):
+                continue
+            parent = mod.parents.get(node)
+            if isinstance(parent, ast.Call) and parent.func is node:
+                yield Finding(
+                    "R2", mod.path, node.lineno, node.col_offset,
+                    "`jax.jit(...)(args)` builds a throwaway wrapper — the "
+                    "compilation is never reused; hoist the jitted callable "
+                    "out of the call expression",
+                )
+                continue
+            if mod.in_loop(node):
+                yield Finding(
+                    "R2", mod.path, node.lineno, node.col_offset,
+                    "`jax.jit(...)` inside a loop body creates a fresh "
+                    "wrapper (empty compile cache) every iteration — hoist "
+                    "it above the loop",
+                )
+    # -- traced-value branches inside @jit functions ----------------------
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _jit_decorated(fn):
+            continue
+        statics = _static_argnames(fn)
+        params = {
+            a.arg
+            for a in (
+                fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs
+            )
+        } - statics - {"self"}
+        for sub in ast.walk(fn):
+            if not isinstance(sub, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+                continue
+            test = sub.test
+            if _branch_is_static(test, params):
+                continue
+            # only flag when a non-static parameter actually appears
+            names = {
+                n.id for n in ast.walk(test) if isinstance(n, ast.Name)
+            }
+            if not (names & params):
+                continue
+            kind = type(sub).__name__.lower()
+            yield Finding(
+                "R2", mod.path, sub.lineno, sub.col_offset,
+                f"Python `{kind}` on traced parameter(s) "
+                f"{sorted(names & params)} inside @jit function "
+                f"`{fn.name}` — concretizes the tracer (error) or, with "
+                f"static args, recompiles per distinct value; use "
+                f"`jnp.where`/`lax.cond` or declare the arg static",
+            )
+        # unhashable literals bound to declared-static params at call sites
+        # within this module
+        if statics:
+            for call in ast.walk(mod.tree):
+                if not isinstance(call, ast.Call):
+                    continue
+                if _call_name(call) != fn.name:
+                    continue
+                for kw in call.keywords:
+                    if kw.arg in statics and isinstance(
+                        kw.value, (ast.List, ast.Dict, ast.Set)
+                    ):
+                        yield Finding(
+                            "R2", mod.path, kw.value.lineno,
+                            kw.value.col_offset,
+                            f"unhashable {type(kw.value).__name__.lower()} "
+                            f"literal passed to static arg `{kw.arg}` of "
+                            f"jit'd `{fn.name}` — statics must be hashable "
+                            f"(use a tuple)",
+                        )

@@ -1,0 +1,126 @@
+"""R1 — cache scatters must pass an explicit out-of-bounds ``mode=``.
+
+The PR 5 corruption class: ``.at[idx].set(v)`` on a KV/slot cache silently
+*clamps* out-of-bounds indices, so a past-the-end write lands on the last
+valid position instead of being dropped — corrupting the newest real entry.
+Every scatter whose target looks like a cache buffer must spell out the
+intended semantics (``mode="drop"`` / ``"promise_in_bounds"`` / ...).
+
+``jax.lax.dynamic_update_slice*`` has no ``mode=`` parameter at all (it
+always clamps), so a cache-targeted call there can only be justified with a
+suppression explaining why the start index is in bounds.
+
+Target detection is a name heuristic: the scattered-into expression's
+identifier chain must contain one of `CACHE_NAME_PARTS`. This is textual on
+purpose — the codebase consistently names its cache buffers, and a rename
+that dodges the linter would also dodge every human reviewer's pattern
+memory, which is the failure mode this rule exists to remove.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .core import Finding, LintModule, rule
+
+#: substrings of identifiers that mark a scatter target as a cache buffer.
+#: Verified against the repo's full scatter inventory: matches the KV/slot
+#: cache sites in models/ + serve/ and none of the local-temp scatters
+#: (sampling masks, test arrays, LUT tables).
+CACHE_NAME_PARTS = (
+    "cache", "ckv", "krope", "slot", "last_token", "leaf", "buf", "kv",
+    "state", "full",
+)
+
+#: functions with clamp-always semantics and no mode= escape hatch
+_DUS_NAMES = {
+    "dynamic_update_slice",
+    "dynamic_update_slice_in_dim",
+    "dynamic_update_index_in_dim",
+}
+
+
+def _name_chain(node: ast.AST) -> list[str]:
+    """Identifier parts of an attribute/subscript chain, outermost first:
+    ``cache["k"].at[i]`` -> ["cache", "k", "at"]."""
+    parts: list[str] = []
+
+    def walk(n: ast.AST) -> None:
+        if isinstance(n, ast.Name):
+            parts.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            walk(n.value)
+            parts.append(n.attr)
+        elif isinstance(n, ast.Subscript):
+            walk(n.value)
+            if isinstance(n.slice, ast.Constant) and isinstance(
+                n.slice.value, str
+            ):
+                parts.append(n.slice.value)
+        elif isinstance(n, ast.Call):
+            walk(n.func)
+
+    walk(node)
+    return parts
+
+
+def _is_cache_name(node: ast.AST) -> bool:
+    chain = _name_chain(node)
+    return any(
+        part in ident.lower()
+        for ident in chain
+        for part in CACHE_NAME_PARTS
+    )
+
+
+def _at_scatter_target(call: ast.Call) -> ast.AST | None:
+    """For ``<target>.at[...].set/add/mul/min/max(...)`` return <target>."""
+    f = call.func
+    if not isinstance(f, ast.Attribute):
+        return None
+    if f.attr not in {"set", "add", "mul", "min", "max", "apply"}:
+        return None
+    sub = f.value
+    if not isinstance(sub, ast.Subscript):
+        return None
+    at = sub.value
+    if isinstance(at, ast.Attribute) and at.attr == "at":
+        return at.value
+    return None
+
+
+def _has_mode_kw(call: ast.Call) -> bool:
+    return any(kw.arg == "mode" for kw in call.keywords)
+
+
+@rule("R1", "cache scatter without explicit out-of-bounds mode= "
+            "(silent clamp corrupts the last valid entry)")
+def check_scatter_modes(mod: LintModule) -> Iterable[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        target = _at_scatter_target(node)
+        if target is not None:
+            if _is_cache_name(target) and not _has_mode_kw(node):
+                yield Finding(
+                    "R1", mod.path, node.lineno, node.col_offset,
+                    f"`.at[...].{node.func.attr}` scatter onto cache-like "
+                    f"target `{mod.text(target)}` without explicit mode= — "
+                    f"default silently clamps OOB indices onto the last "
+                    f"valid entry (the PR-5 corruption class)",
+                )
+            continue
+        # dynamic_update_slice family: clamp-only, no mode= exists
+        fn = node.func
+        fname = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else ""
+        )
+        if fname in _DUS_NAMES and node.args:
+            if _is_cache_name(node.args[0]):
+                yield Finding(
+                    "R1", mod.path, node.lineno, node.col_offset,
+                    f"`{fname}` onto cache-like target "
+                    f"`{mod.text(node.args[0])}` always clamps OOB starts "
+                    f"and has no mode= — prove the index in bounds with a "
+                    f"justified suppression or use `.at[...].set(mode=...)`",
+                )

@@ -1,0 +1,106 @@
+"""Runtime sanitizer mode + jit compile-count guard.
+
+`enable_sanitizers()` flips JAX into its strict modes — silent rank
+promotion, silent dtype promotion, and NaN propagation all become hard
+errors — so the fast test lane catches the shape/dtype sloppiness the
+static rules can't see. Wired to pytest via `tests/conftest.py`
+(``pytest --sanitize`` or ``REPRO_SANITIZE=1``).
+
+`CompileGuard` is the dynamic complement of lint rule R2: snapshot the
+compile-cache sizes of a set of jitted callables, run N steady-state
+steps, and assert the caches did not grow — i.e. zero recompiles after
+warmup. Engine/ModelDrafter expose their jitted entries via
+``jit_entries()`` for exactly this.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Iterable, Mapping
+
+
+def enable_sanitizers(*, debug_nans: bool = True) -> dict:
+    """Turn on strict JAX modes; returns the previous values for restore."""
+    import jax
+
+    prev = {
+        "jax_numpy_rank_promotion": jax.config.jax_numpy_rank_promotion,
+        "jax_numpy_dtype_promotion": jax.config.jax_numpy_dtype_promotion,
+        "jax_debug_nans": jax.config.jax_debug_nans,
+    }
+    jax.config.update("jax_numpy_rank_promotion", "raise")
+    jax.config.update("jax_numpy_dtype_promotion", "strict")
+    jax.config.update("jax_debug_nans", bool(debug_nans))
+    return prev
+
+
+def restore_sanitizers(prev: Mapping) -> None:
+    import jax
+
+    for key, val in prev.items():
+        jax.config.update(key, val)
+
+
+def sanitizers_requested(env: Mapping[str, str] | None = None) -> bool:
+    env = os.environ if env is None else env
+    return env.get("REPRO_SANITIZE", "0") not in ("", "0", "false")
+
+
+def _cache_size(fn) -> int:
+    """Compile-cache entry count of one jax.jit wrapper (0 if opaque)."""
+    probe = getattr(fn, "_cache_size", None)
+    if callable(probe):
+        try:
+            return int(probe())
+        except Exception:
+            return 0
+    return 0
+
+
+class CompileGuard:
+    """Assert a set of jitted callables stop compiling after warmup.
+
+        guard = CompileGuard(engine.jit_entries())
+        ... warmup ticks ...
+        guard.arm()
+        ... steady-state ticks ...
+        guard.assert_steady()   # raises AssertionError naming the culprit
+
+    Entries are a name → jitted-callable mapping; callables without a
+    ``_cache_size`` probe are tracked as permanently 0 (the guard can then
+    only prove nothing, never fail spuriously).
+    """
+
+    def __init__(self, entries: Mapping[str, Callable]):
+        self.entries = dict(entries)
+        self._baseline: dict[str, int] | None = None
+
+    def sizes(self) -> dict[str, int]:
+        return {name: _cache_size(fn) for name, fn in self.entries.items()}
+
+    def arm(self) -> dict[str, int]:
+        self._baseline = self.sizes()
+        return dict(self._baseline)
+
+    def new_compiles(self) -> dict[str, int]:
+        assert self._baseline is not None, "arm() before assert/new_compiles"
+        now = self.sizes()
+        return {
+            name: now[name] - self._baseline[name]
+            for name in self.entries
+            if now[name] > self._baseline[name]
+        }
+
+    def assert_steady(self, what: str = "steady state") -> None:
+        grew = self.new_compiles()
+        assert not grew, (
+            f"recompiles during {what}: "
+            + ", ".join(f"{k} (+{v})" for k, v in sorted(grew.items()))
+            + " — a traced-value branch or unstable static arg is re-keying "
+              "the jit cache (lint rule R2 class)"
+        )
+
+
+def guard_entries(obj) -> dict[str, Callable]:
+    """Collect jitted entries from an object exposing ``jit_entries()``."""
+    probe = getattr(obj, "jit_entries", None)
+    return dict(probe()) if callable(probe) else {}

@@ -253,9 +253,11 @@ def attn_apply(
             # prefill longer than the ring: keep the trailing `buf` tokens.
             src = s - buf + jnp.arange(buf, dtype=jnp.int32)
             dst = (start[:, None] + src[None, :]) % buf            # (B, buf)
-            ck = cache["k"].at[bidx, dst].set(k[:, src])
-            cv = cache["v"].at[bidx, dst].set(v[:, src])
-            sp = cache["slot_pos"].at[bidx, dst].set(positions[:, src])
+            ck = cache["k"].at[bidx, dst].set(k[:, src], mode="promise_in_bounds")
+            cv = cache["v"].at[bidx, dst].set(v[:, src], mode="promise_in_bounds")
+            sp = cache["slot_pos"].at[bidx, dst].set(
+                positions[:, src], mode="promise_in_bounds"
+            )
         else:
             if tree is not None:
                 # one slot per tree node; siblings share a *position* but

@@ -129,6 +129,7 @@ def _stage_apply(
                 aux = aux + a
                 new_cache_rep[f"b{i}"] = nc
             cache_full = jax.tree.map(
+                # lint: disable=R1 -- li scans jnp.arange(reps): in bounds by construction
                 lambda full, new: jax.lax.dynamic_update_index_in_dim(
                     full, new.astype(full.dtype), li, 0
                 ),
@@ -392,6 +393,7 @@ def scatter_slot_cache(full_cache, single_cache, slot: int):
     batch axis under the stacked layer-repeat axis) — shared by the serving
     engine and the speculative ModelDrafter's mirrored cache."""
     def scat(full, one):
+        # lint: disable=R1 -- slot is a host int the engine allocated < max_slots
         return jax.lax.dynamic_update_slice_in_dim(
             full, one.astype(full.dtype), slot, axis=1
         )
@@ -411,7 +413,7 @@ def reset_slot_idx(cache, slot: int, value: int = 0):
     positions (or index-as-position values) exceeding every live query."""
     def fix(path, leaf):
         if getattr(path[-1], "key", None) == "idx":
-            return leaf.at[..., slot].set(value)
+            return leaf.at[..., slot].set(value, mode="drop")
         return leaf
 
     return jax.tree_util.tree_map_with_path(fix, cache)
@@ -464,7 +466,11 @@ def compact_tree_cache(cache, pos, sel, take):
             # live tree entries — but leaves identity (take=N) windows of
             # non-participating slots byte-for-byte unchanged
             gathered = jnp.where(live[None], gathered, -1).astype(leaf.dtype)
-        return leaf.at[:, bidx, dst].set(gathered)
+        # drop, don't clamp: an identity window at the buffer frontier has
+        # dst columns past max_len; clamping would re-aim them at the last
+        # valid slot (harmless today only because src clamps identically —
+        # see test_spec.py boundary regressions), dropping is exact
+        return leaf.at[:, bidx, dst].set(gathered, mode="drop")
 
     return jax.tree_util.tree_map_with_path(fix, cache)
 

@@ -404,7 +404,7 @@ class Engine:
         req.t_first_token = now
         if req.t_submit:
             self.obs.observe_ttft(now - req.t_submit)
-        self.last_token = self.last_token.at[slot, 0].set(first_tok)
+        self.last_token = self.last_token.at[slot, 0].set(first_tok, mode="drop")
         if len(req.generated) >= req.max_new_tokens:
             # prefill already produced everything asked for (max_new_tokens=1)
             req.done = True
@@ -565,7 +565,9 @@ class Engine:
             req = self.slot_req[slot]
             self.decode_tokens += 1
             req.generated.append(int(nxt[slot]))
-            self.last_token = self.last_token.at[slot, 0].set(nxt[slot])
+            self.last_token = self.last_token.at[slot, 0].set(
+                nxt[slot], mode="drop"
+            )
             if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
                 self._finish_slot(slot, req, now)
         self.cache = rollback_cache(cache, jnp.asarray(new_idx))
@@ -626,8 +628,8 @@ class Engine:
         for slot in range(self.max_slots):
             if self.active[slot]:
                 k_eff[slot] = self.spec.k_policy(
-                    float(self.slot_accept[slot]),
-                    int(self.slot_skip_streak[slot]),
+                    float(self.slot_accept[slot]),  # lint: disable=R3 -- slot_accept is a host np.ndarray EWMA
+                    int(self.slot_skip_streak[slot]),  # lint: disable=R3 -- slot_skip_streak is host np.ndarray state
                 )
         return k_eff
 
@@ -653,6 +655,7 @@ class Engine:
         for slot, req in self.slot_req.items():
             if self.active[slot]:
                 contexts[slot] = np.concatenate(
+                    # lint: disable=R3 -- prompt/generated are host python lists
                     [np.asarray(req.prompt, np.int64), np.asarray(req.generated, np.int64)]
                 )
                 pos[slot] = len(req.prompt) + len(req.generated) - 1
@@ -712,12 +715,12 @@ class Engine:
             new_idx[slot] = pos[slot] + take
             self.decode_tokens += take
             self.spec_slot_steps += 1
-            self.drafted_tokens += int(k_eff[slot])
+            self.drafted_tokens += int(k_eff[slot])  # lint: disable=R3 -- _choose_k_eff returns host np.ndarray
             self.verified_nodes += k + 1
             # acceptance counts the verifier's verdict, not the emission cap:
             # a request finishing mid-step still accepted n_acc draft tokens.
             self.accepted_tokens += int(n_acc[slot])
-            self._update_slot_accept(slot, int(k_eff[slot]), int(n_acc[slot]))
+            self._update_slot_accept(slot, int(k_eff[slot]), int(n_acc[slot]))  # lint: disable=R3 -- k_eff is host np from _choose_k_eff
             if len(req.generated) >= req.max_new_tokens or self._slot_exhausted(req):
                 self._finish_slot(slot, req, now)
         self.spec_steps += 1
@@ -808,6 +811,26 @@ class Engine:
                 "tree_verify", _t0, m_real=_m_active * n_nodes,
                 m_padded=self.max_slots * n_nodes, n_nodes=n_nodes,
             )
+
+    def jit_entries(self) -> dict:
+        """Every jitted entry point this engine dispatches through, by name —
+        the surface `repro.lint.CompileGuard` watches to assert steady-state
+        ticks stop compiling after warmup (the dynamic R2 check). The
+        drafter's own entries ride along prefixed `drafter.`."""
+        entries = {"prefill1": self._prefill1, "decode": self._decode}
+        if self._chunk_verify is not None:
+            entries["chunk_verify"] = self._chunk_verify
+        if self.spec is not None:
+            entries["verify"] = self._verify
+        if self._tree is not None:
+            entries["compact"] = self._compact
+        if self.drafter is not None:
+            probe = getattr(self.drafter, "jit_entries", None)
+            if callable(probe):
+                entries.update(
+                    {f"drafter.{k}": v for k, v in probe().items()}
+                )
+        return entries
 
     def reset_stats(self):
         """Zero the token/acceptance counters (e.g. after a warmup run, so a

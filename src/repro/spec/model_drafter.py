@@ -75,6 +75,15 @@ class ModelDrafter(Drafter):
             donate_argnums=(1,),
         )
 
+    def jit_entries(self) -> dict:
+        """Jitted entry points for repro.lint.CompileGuard (via
+        Engine.jit_entries)."""
+        return {
+            "prefill": self._prefill,
+            "verify": self._verify,
+            "decode": self._decode,
+        }
+
     # ------------------------------------------------------------------
     def on_admit(self, slot: int, prompt: np.ndarray) -> None:
         # the same bucketed admission as Engine.add, so the draft cache's

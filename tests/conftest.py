@@ -26,5 +26,30 @@ def rng():
     return np.random.default_rng(0)
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="run under JAX strict modes: rank-promotion=raise, strict "
+             "dtype promotion, debug_nans (also: REPRO_SANITIZE=1)",
+    )
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    import os
+
+    if config.getoption("--sanitize") or os.environ.get(
+        "REPRO_SANITIZE", "0"
+    ) not in ("", "0", "false"):
+        # must run before any jit traces: conftest imports precede tests
+        from repro.lint.sanitize import enable_sanitizers
+
+        enable_sanitizers()
+        config._repro_sanitized = True
+
+
+def pytest_report_header(config):
+    if getattr(config, "_repro_sanitized", False):
+        return ["repro sanitizer mode: rank_promotion=raise, "
+                "dtype_promotion=strict, debug_nans=on"]
+    return []

@@ -1,0 +1,117 @@
+"""results/check_regression.py: the nightly bench gate must fail loudly —
+not silently skip — when a tracked metric disappears from the current run."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_PATH = (
+    pathlib.Path(__file__).resolve().parent.parent
+    / "results" / "check_regression.py"
+)
+_spec = importlib.util.spec_from_file_location("check_regression", _PATH)
+cr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cr)
+
+
+def _row(name, us=None, winner=None):
+    r = {"name": name}
+    if us is not None:
+        r["us_per_call"] = us
+    if winner is not None:
+        r["winner"] = winner
+    return r
+
+
+def _rows(*rows):
+    return {r["name"]: r for r in rows}
+
+
+def compare(base, cur, **kw):
+    kw.setdefault("threshold", 0.15)
+    kw.setdefault("pattern", "")
+    kw.setdefault("strict_winners", False)
+    return cr.compare_suite(base, cur, **kw)
+
+
+class TestCompareSuite:
+    def test_clean_within_threshold(self):
+        f, w = compare(_rows(_row("a", 100.0)), _rows(_row("a", 110.0)))
+        assert f == [] and w == []
+
+    def test_timing_regression_fails(self):
+        f, _ = compare(_rows(_row("a", 100.0)), _rows(_row("a", 120.0)))
+        assert len(f) == 1 and "a" in f[0]
+
+    def test_missing_tracked_metric_fails(self):
+        # the row survives but its us_per_call vanished (e.g. the bench now
+        # emits only a winner field) — previously a silent skip
+        f, _ = compare(_rows(_row("a", 100.0)), _rows(_row("a")))
+        assert len(f) == 1
+        assert "missing" in f[0] and "100.0" in f[0]
+
+    def test_missing_baseline_row_fails(self):
+        f, _ = compare(
+            _rows(_row("a", 100.0), _row("b", 50.0)), _rows(_row("a", 100.0))
+        )
+        assert len(f) == 1 and f[0].startswith("b:")
+
+    def test_missing_row_respects_pattern(self):
+        f, _ = compare(
+            _rows(_row("crossover/a", 1.0), _row("decode/b", 1.0)),
+            _rows(_row("crossover/a", 1.0)),
+            pattern="crossover/",
+        )
+        assert f == []      # decode/b is outside the gated pattern
+
+    def test_untracked_baseline_row_still_skipped(self):
+        # baseline itself never had a time → nothing to gate
+        f, w = compare(_rows(_row("a")), _rows(_row("a")))
+        assert f == [] and w == []
+
+    def test_new_row_without_baseline_only_warns(self):
+        f, w = compare(
+            _rows(_row("a", 1.0)), _rows(_row("a", 1.0), _row("new", 2.0))
+        )
+        assert f == [] and len(w) == 1 and "new" in w[0]
+
+    def test_winner_flip_warns_or_fails(self):
+        base = _rows(_row("m/winner", winner="vlut"))
+        cur = _rows(_row("m/winner", winner="gemm"))
+        f, w = compare(base, cur)
+        assert f == [] and len(w) == 1
+        f, w = compare(base, cur, strict_winners=True)
+        assert len(f) == 1 and w == []
+
+
+class TestMainExit:
+    def _write(self, d, rows):
+        (d / "BENCH_t.json").write_text(json.dumps({"rows": rows}))
+
+    @pytest.fixture
+    def dirs(self, tmp_path):
+        b, c = tmp_path / "base", tmp_path / "cur"
+        b.mkdir(), c.mkdir()
+        return b, c
+
+    def _argv(self, b, c):
+        return ["--baseline-dir", str(b), "--current-dir", str(c)]
+
+    def test_exit_zero_when_clean(self, dirs):
+        b, c = dirs
+        self._write(b, [_row("a", 100.0)])
+        self._write(c, [_row("a", 101.0)])
+        assert cr.main(self._argv(b, c)) == 0
+
+    def test_exit_one_on_missing_tracked_key(self, dirs, capsys):
+        b, c = dirs
+        self._write(b, [_row("a", 100.0)])
+        self._write(c, [])
+        assert cr.main(self._argv(b, c)) == 1
+        assert "missing from current" in capsys.readouterr().out
+
+    def test_exit_two_when_no_common_files(self, dirs):
+        b, c = dirs
+        self._write(b, [_row("a", 100.0)])
+        assert cr.main(self._argv(b, c)) == 2

@@ -111,7 +111,8 @@ class TestQTensor:
         q = quantize_blockwise(jnp.ones((4, 8)))
         leaves = jax.tree.leaves(q)
         assert len(leaves) == 2  # q, scale — shape tuple must NOT leak
-        out = jax.jit(lambda t: dequantize_blockwise(t))(q)
+        dequant = jax.jit(dequantize_blockwise)
+        out = dequant(q)
         assert out.shape == (4, 8)
 
     def test_global_norm(self):

@@ -379,3 +379,33 @@ def test_temperature_sampling_varies(served, rng):
         sched.run_to_completion()
         outs.add(tuple(reqs[0].generated))
     assert len(outs) > 1  # different seeds → different samples
+
+
+@pytest.mark.slow
+class TestCompileStability:
+    """Dynamic complement of lint rule R2: after a warmup pass has traced
+    every jitted entry point, steady-state scheduler ticks over a mixed
+    chunked-prefill + decode + speculative workload must not add a single
+    compile-cache entry — a traced-value branch or unstable static arg
+    anywhere on the tick path would."""
+
+    def test_zero_recompiles_after_warmup(self, served, rng):
+        from repro.lint import CompileGuard
+        from repro.spec import SpecConfig
+
+        cfg, params = served
+        eng = Engine(params, cfg, max_slots=3, max_len=64,
+                     prefill_chunk=4, spec=SpecConfig(k=2, drafter="ngram"))
+        sched = ContinuousBatchingScheduler(eng)
+        # warmup: a full mixed workload traces each entry at its one shape
+        # (chunk-only ticks, mixed chunk+decode ticks, pure spec decode)
+        sched.submit(_requests(cfg, 6, rng, max_new=8))
+        sched.run_to_completion()
+        guard = CompileGuard(eng.jit_entries())
+        base = guard.arm()
+        assert sum(base.values()) > 0, "no compile activity seen in warmup"
+        # steady state: fresh requests, same shapes — 20 ticks, zero misses
+        sched.submit(_requests(cfg, 10, rng, max_new=8))
+        for _ in range(20):
+            sched.tick()
+        guard.assert_steady("20 steady-state mixed prefill/decode/spec ticks")

@@ -387,6 +387,62 @@ class TestCompactTreeCache:
                 np.asarray(out[key]), np.asarray(cache[key])
             )
 
+    @staticmethod
+    def _boundary_cache(rng, b, L):
+        return {
+            "k": jnp.asarray(rng.normal(size=(1, b, L, 1, 1)).astype(np.float32)),
+            "slot_pos": jnp.asarray(
+                np.arange(L, dtype=np.int32)[None, None].repeat(b, axis=1)
+            ),
+            "idx": jnp.full((1, b), L, jnp.int32),
+        }
+
+    def test_identity_window_crossing_buffer_end_is_noop(self):
+        """Identity window whose dst columns run past max_len (a full buffer
+        plus a non-participating slot): with mode="drop" the out-of-range
+        columns vanish and the in-range ones gather themselves — byte-exact
+        no-op. (Boundary regression for the R1 fix: the old implicit clamp
+        was load-bearing here only because src clamped identically.)"""
+        b, L, n = 1, 10, 4
+        rng = np.random.default_rng(5)
+        cache = self._boundary_cache(rng, b, L)
+        out = compact_tree_cache(
+            cache,
+            jnp.asarray([L - 2]),                       # window = [8..11] > L
+            jnp.arange(n, dtype=jnp.int32)[None],
+            jnp.asarray([n]),
+        )
+        for key in ("k", "slot_pos", "idx"):
+            np.testing.assert_array_equal(
+                np.asarray(out[key]), np.asarray(cache[key])
+            )
+
+    def test_oob_window_columns_never_clobber_last_entry(self):
+        """Non-identity window at the buffer frontier: the columns whose dst
+        lands past max_len must be DROPPED, not clamped onto the last valid
+        slot (under the old clamp, the dead col-3 write — gathered k[6],
+        slot_pos -1 — landed on slot 7 and clobbered the live entry)."""
+        b, L = 1, 8
+        rng = np.random.default_rng(7)
+        cache = self._boundary_cache(rng, b, L)
+        k_old = np.asarray(cache["k"]).copy()
+        out = compact_tree_cache(
+            cache,
+            jnp.asarray([L - 2]),                        # dst = [6, 7, 8, 9]
+            jnp.asarray([[1, 0, 2, 0]], jnp.int32),      # src = [7, 6, 8, 6]
+            jnp.asarray([2]),                            # live cols: 0, 1
+        )
+        k = np.asarray(out["k"])[0, 0, :, 0, 0]
+        sp = np.asarray(out["slot_pos"])[0, 0]
+        # accepted path: slot 6 ← old 7, slot 7 ← old 6 (gathers clamp src 8
+        # to 7, but those columns' writes are dropped, never visible)
+        assert k[6] == k_old[0, 0, 7, 0, 0]
+        assert k[7] == k_old[0, 0, 6, 0, 0]
+        assert sp[6] == 7 and sp[7] == 6
+        # untouched prefix
+        np.testing.assert_array_equal(k[:6], k_old[0, 0, :6, 0, 0])
+        np.testing.assert_array_equal(sp[:6], np.arange(6))
+
 
 # --------------------------------------------------------------------------
 # Adaptive-K policy (pure config logic, no model)
@@ -472,9 +528,8 @@ class TestVerifyStep:
         cfg, params = served
         prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
         cache = init_cache(cfg, 1, max_len)
-        logits, cache = jax.jit(
-            lambda p, c, t: prefill(p, t, c, cfg, mode="serve")
-        )(params, cache, prompt)
+        prefill_fn = jax.jit(lambda p, c, t: prefill(p, t, c, cfg, mode="serve"))
+        logits, cache = prefill_fn(params, cache, prompt)
         return cfg, params, cache, int(jnp.argmax(logits[0]))
 
     def _check_matches_sequential(self, cfg, params, cache, toks):
