@@ -48,8 +48,15 @@ from repro.roofline.analysis import mpgemm_cost
 from repro.roofline.hlo_stats import parse_hlo_stats
 from .common import emit, time_paired, write_results
 
-#: the M sweep the acceptance gate requires a winner for
-MS = (1, 4, 16, 32, 64, 128)
+#: the M sweep the acceptance gate requires a winner for. Beyond the
+#: powers-of-two scaling curve, the grid pins the M values the Engine
+#: actually dispatches (ROADMAP item 1's serving-realistic shapes):
+#:   M=4    chain-verify K+1 rows (draft_k=3, B=1)
+#:   M=7    tree-verify n_nodes for tree=(2, 2): 1 + 2 + 4 nodes
+#:   M=16   chain verify across slots (4 slots x K+1) / spec_bench batch
+#:   M=48   chunked prefill, chunk=16 x 3 prefilling slots
+#:   M=256  chunked prefill, chunk=32 x 8 slots (saturated admission burst)
+MS = (1, 4, 7, 16, 32, 48, 64, 128, 256)
 #: (tag, M_out, K) layer shapes; quick keeps one edge-scale cell
 SHAPES = [
     ("edge-m", 512, 2048),

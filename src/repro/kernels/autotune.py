@@ -31,11 +31,34 @@ import time
 from typing import Callable, Iterable
 
 _R = 3
-#: default per-kernel VMEM working-set budget (§4 K_tile rule, TPU-adapted)
+#: default per-kernel VMEM working-set budget (§4 K_tile rule, TPU-adapted).
+#: This constant is the SINGLE source of truth for every budget consumer —
+#: candidate enumeration here, `ops.select_tiles`, and the R5 lint rule all
+#: resolve it through :func:`vmem_budget_bytes` so they can never drift.
 VMEM_BUDGET_BYTES = 4 * 2**20
 
 CACHE_ENV = "REPRO_VLUT_AUTOTUNE_CACHE"
 TUNE_ENV = "REPRO_VLUT_AUTOTUNE"
+#: env override for the VMEM budget (bytes) — hardware generations differ
+#: (v4: 16 MiB/core usable, v5e: ~64 MiB shared); the autotuner AND the R5
+#: lint rule both read this, so an override re-tunes and re-lints coherently
+VMEM_BUDGET_ENV = "REPRO_VLUT_VMEM_BUDGET"
+
+
+def vmem_budget_bytes() -> int:
+    """The per-kernel VMEM working-set budget every consumer must use:
+    ``REPRO_VLUT_VMEM_BUDGET`` when set (bytes), else VMEM_BUDGET_BYTES.
+    A malformed or non-positive override falls back to the default rather
+    than silently disabling the budget rule."""
+    raw = os.environ.get(VMEM_BUDGET_ENV)
+    if raw:
+        try:
+            v = int(raw)
+        except ValueError:
+            return VMEM_BUDGET_BYTES
+        if v > 0:
+            return v
+    return VMEM_BUDGET_BYTES
 
 _BM_CANDIDATES = (64, 128, 256)
 _BN_CANDIDATES = (128, 256, 512)
@@ -62,7 +85,7 @@ def tile_vmem_bytes(
 def heuristic_tiles(
     g: int,
     impl: str,
-    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+    vmem_budget: int | None = None,
     *,
     fused: bool = False,
 ) -> dict:
@@ -72,10 +95,12 @@ def heuristic_tiles(
     streamed table fits the budget (lookup) or 128 (decode). With
     ``fused=True`` the working set additionally holds the f32 activation
     tile and the int32 scratch accumulator, so bkg shrinks until the whole
-    fused tile fits the same budget."""
+    fused tile fits the same budget. ``vmem_budget=None`` resolves through
+    :func:`vmem_budget_bytes` (env-overridable)."""
+    budget = vmem_budget if vmem_budget is not None else vmem_budget_bytes()
     if impl == "lookup":
         bn = 128
-        bkg = max(8, vmem_budget_bytes // (_R ** g * bn * 2))
+        bkg = max(8, budget // (_R ** g * bn * 2))
         bkg = min(128, 1 << (bkg.bit_length() - 1))                 # pow2 clamp
         t = dict(bm=128, bn=bn, bkg=bkg)
     else:
@@ -83,7 +108,7 @@ def heuristic_tiles(
     while (
         fused
         and t["bkg"] > 8
-        and tile_vmem_bytes(g, impl, **t, fused=True) > vmem_budget_bytes
+        and tile_vmem_bytes(g, impl, **t, fused=True) > budget
     ):
         t["bkg"] //= 2
     return t
@@ -97,13 +122,14 @@ def candidate_tiles(
     n: int,
     *,
     fused: bool = True,
-    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+    vmem_budget: int | None = None,
 ) -> list[dict]:
     """Legal (bm, bn, bkg) candidates for a concrete problem: every
     combination from the standard ladders that (a) stays within the VMEM
     budget and (b) isn't degenerate for the problem shape (tiles larger than
     the padded problem are clamped away as duplicates). Always non-empty —
     the §4 heuristic is appended as a safety net."""
+    budget = vmem_budget if vmem_budget is not None else vmem_budget_bytes()
     m_cap = _round_up(max(m, 1), 8)
     n_cap = _round_up(max(n, 1), 128)
     out: list[dict] = []
@@ -117,12 +143,12 @@ def candidate_tiles(
                 key = (bm, bn, bkg)
                 if key in seen:
                     continue
-                if tile_vmem_bytes(g, impl, bm, bn, bkg, fused=fused) > vmem_budget_bytes:
+                if tile_vmem_bytes(g, impl, bm, bn, bkg, fused=fused) > budget:
                     continue
                 seen.add(key)
                 out.append(dict(bm=bm, bn=bn, bkg=bkg))
     if not out:
-        out.append(heuristic_tiles(g, impl, vmem_budget_bytes, fused=fused))
+        out.append(heuristic_tiles(g, impl, budget, fused=fused))
     return out
 
 
@@ -254,18 +280,19 @@ def tune(
     cache: TileCache | None = None,
     benchmark: Callable[[dict], float] | None = None,
     candidates: Iterable[dict] | None = None,
-    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+    vmem_budget: int | None = None,
 ) -> TuneResult:
     """Time every legal candidate, persist the winner, return it."""
     import jax
 
     backend = backend or ("interpret" if interpret else jax.default_backend())
     cache = cache or default_cache()
+    budget = vmem_budget if vmem_budget is not None else vmem_budget_bytes()
     cands = list(
         candidates
         if candidates is not None
         else candidate_tiles(
-            g, impl, m, kg, n, fused=fused, vmem_budget_bytes=vmem_budget_bytes
+            g, impl, m, kg, n, fused=fused, vmem_budget=budget
         )
     )
     bench = benchmark or _default_benchmark(
@@ -281,7 +308,7 @@ def tune(
         # Every candidate failed (transient OOM, busy device, …): return the
         # heuristic but do NOT poison the persistent cache — a later run
         # should get another chance to tune this key.
-        best = heuristic_tiles(g, impl, vmem_budget_bytes, fused=fused)
+        best = heuristic_tiles(g, impl, budget, fused=fused)
         return TuneResult(tiles=best, seconds=float("inf"), trials=trials)
     best, best_s = min(trials, key=lambda kv: kv[1])
     key = cache_key(g, impl, m, kg, n, backend=backend, fused=fused)

@@ -53,13 +53,15 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def select_tiles(g: int, impl: Impl, vmem_budget_bytes: int = autotune.VMEM_BUDGET_BYTES):
+def select_tiles(g: int, impl: Impl, vmem_budget: int | None = None):
     """Static §4 tile heuristic (delegates to autotune.heuristic_tiles).
 
     Kept public as the autotuner's cold-cache fallback; measured winners come
-    from kernels/autotune.get_tiles / tune.
+    from kernels/autotune.get_tiles / tune. The default budget resolves
+    through `autotune.vmem_budget_bytes()` (env-overridable) — the same
+    source the R5 lint rule reads, so dispatch and lint can never drift.
     """
-    return autotune.heuristic_tiles(g, impl, vmem_budget_bytes)
+    return autotune.heuristic_tiles(g, impl, vmem_budget)
 
 
 # --------------------------------------------------------------------------

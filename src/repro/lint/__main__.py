@@ -1,6 +1,13 @@
 """CLI: ``python -m repro.lint src/ tests/ benchmarks/ [--json out.json]``.
 
-Exit status: 0 clean, 1 findings (including bad suppressions), 2 usage.
+AST mode (default) lints source files; IR mode (``--ir``) traces the
+entry-point registry and runs the jaxpr passes (I1–I5). Both share the
+exit-code contract: 0 clean, 1 findings (including bad suppressions),
+2 usage.
+
+    python -m repro.lint --ir                     # fast-lane IR gate
+    python -m repro.lint --ir --ir-full           # nightly: full registry
+    python -m repro.lint --ir --update-snapshots  # refresh golden jaxprs
 """
 from __future__ import annotations
 
@@ -8,6 +15,34 @@ import argparse
 import sys
 
 from .core import lint_paths, registered_rules, report_json, write_json
+
+
+def _run_ir(args) -> int:
+    # imported lazily: IR mode needs jax + the model stack, AST mode doesn't
+    from . import ir
+
+    select = (
+        {s.strip() for s in args.select.split(",") if s.strip()}
+        if args.select else None
+    )
+    entries = ir.default_entries(full=args.ir_full)
+    findings = ir.run_passes(
+        entries, select=select,
+        snapshot_root=args.snapshot_dir,
+        update_snapshots=args.update_snapshots,
+    )
+    for f in findings:
+        print(f.format())
+    if args.json:
+        write_json(args.json, findings, len(entries))
+    counts = report_json(findings, len(entries))["counts"]
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    verb = "snapshotted" if args.update_snapshots else "checked"
+    print(
+        f"repro.lint --ir: {len(entries)} entry point(s) {verb}, "
+        f"{len(findings)} finding(s)" + (f" [{summary}]" if summary else "")
+    )
+    return 1 if findings else 0
 
 
 def main(argv=None) -> int:
@@ -18,19 +53,44 @@ def main(argv=None) -> int:
     )
     ap.add_argument("paths", nargs="*", default=None,
                     help="files or directories to lint (default: src tests "
-                         "benchmarks)")
+                         "benchmarks; ignored with --ir)")
     ap.add_argument("--json", metavar="FILE", default=None,
                     help="also write a machine-readable JSON report")
     ap.add_argument("--select", default=None,
-                    help="comma-separated rule ids to run (default: all)")
+                    help="comma-separated rule/pass ids to run "
+                         "(default: all)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the registered rules and exit")
+    ap.add_argument("--ir", action="store_true",
+                    help="run the jaxpr-level IR passes over the traced "
+                         "entry-point registry instead of the AST rules")
+    ap.add_argument("--ir-full", action="store_true",
+                    help="with --ir: trace the full registry (all configs "
+                         "and token counts; the nightly lane)")
+    ap.add_argument("--update-snapshots", action="store_true",
+                    help="with --ir: rewrite the golden jaxpr snapshots "
+                         "instead of checking them")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="with --ir: snapshot root (default "
+                         "tests/ir_snapshots)")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="print the registered IR passes and exit")
     args = ap.parse_args(argv)
 
     if args.list_rules:
         for rid, desc in registered_rules().items():
             print(f"{rid}: {desc}")
         return 0
+    if args.list_passes:
+        from . import ir
+
+        for pid, desc in ir.registered_passes().items():
+            print(f"{pid}: {desc}")
+        return 0
+    if args.ir:
+        return _run_ir(args)
+    if args.ir_full or args.update_snapshots or args.snapshot_dir:
+        ap.error("--ir-full/--update-snapshots/--snapshot-dir require --ir")
 
     paths = args.paths or ["src", "tests", "benchmarks"]
     select = (

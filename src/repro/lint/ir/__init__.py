@@ -1,0 +1,56 @@
+"""repro.lint.ir — jaxpr-level static analysis of the serving hot path.
+
+``python -m repro.lint --ir`` traces the entry-point registry
+(kernels/ops.py mpGeMM impls x fusion modes, `Engine.jit_entries()`,
+`ModelDrafter.jit_entries()`) and runs the IR passes:
+
+  I1 quantized-dtype flow   I2 effect/host audit   I3 dead code
+  I4 traffic vs roofline    I5 golden jaxpr snapshots
+
+Pass catalog and the snapshot workflow: docs/static_analysis.md.
+"""
+from __future__ import annotations
+
+# importing the pass modules registers them with the pass registry
+from . import (  # noqa: F401
+    deadcode,
+    dtype_flow,
+    effects,
+    snapshots,
+    traffic,
+)
+from .core import (  # noqa: F401
+    IREntry,
+    all_eqns,
+    aval_bytes,
+    fmt_aval,
+    ir_pass,
+    registered_passes,
+    run_passes,
+    subjaxprs,
+)
+from .registry import (  # noqa: F401
+    default_entries,
+    engine_entries,
+    mpgemm_entries,
+    pinned_trace_env,
+)
+from .snapshots import signature, snapshot_dir, write_snapshot  # noqa: F401
+
+__all__ = [
+    "IREntry",
+    "all_eqns",
+    "aval_bytes",
+    "fmt_aval",
+    "ir_pass",
+    "registered_passes",
+    "run_passes",
+    "subjaxprs",
+    "default_entries",
+    "engine_entries",
+    "mpgemm_entries",
+    "pinned_trace_env",
+    "signature",
+    "snapshot_dir",
+    "write_snapshot",
+]

@@ -1,0 +1,109 @@
+"""I2 — effect/host audit: hot-path jaxprs must be pure device programs.
+
+A serving step that smuggles in an `io_callback` / `debug_callback` /
+`debug_print`, an infeed/outfeed, or an unexpected `device_put` boundary
+serializes the dispatch queue on the host (the dynamic R3 rule's static
+sibling). Tracing makes these explicit: callback-class primitives appear
+as eqns, and anything effectful also lands in `ClosedJaxpr.effects`.
+
+Findings:
+* any callback/infeed-class primitive anywhere in the graph (recursing
+  through pjit/scan/cond bodies);
+* a `device_put` whose operand derives from the traced *arguments* — a
+  host->device transfer of live data baked into a hot-path step. A
+  device_put of a closed-over constant (a decode table, a tree mask) is
+  NOT flagged: constants are hoisted once at compile time, not shipped
+  per step;
+* a non-empty `jaxpr.effects` set not explained by a flagged eqn (belt
+  and braces: new effect kinds fail loudly).
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from ..core import Finding
+from .core import IREntry, ir_pass
+
+_HOST_PRIMS = (
+    "io_callback", "pure_callback", "debug_callback", "debug_print",
+    "infeed", "outfeed", "host_callback", "callback",
+)
+
+
+def _is_var(v) -> bool:
+    return hasattr(v, "aval") and type(v).__name__ != "Literal"
+
+
+def _audit(jaxpr, in_derived, entry, findings, depth=0):
+    """Walk one Jaxpr level tracking which vars derive from the traced
+    arguments (constvars seed False). -> per-outvar derived flags."""
+    derived: dict = {}
+    for v, d in zip(jaxpr.invars, in_derived):
+        derived[v] = d
+    for v in jaxpr.constvars:
+        derived[v] = False
+
+    def get(v):
+        return _is_var(v) and derived.get(v, False)
+
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in _HOST_PRIMS:
+            findings.append(Finding(
+                "I2", entry.path, 0, 0,
+                f"host-callback primitive `{name}` at nesting depth "
+                f"{depth} — hot-path steps must not synchronize with the "
+                f"host (route diagnostics through repro.obs instead)",
+            ))
+        elif name == "device_put" and any(get(v) for v in eqn.invars):
+            findings.append(Finding(
+                "I2", entry.path, 0, 0,
+                f"`device_put` of argument-derived data at nesting depth "
+                f"{depth} — live values are shipped host->device every "
+                f"step instead of staying resident",
+            ))
+        in_d = [get(v) for v in eqn.invars]
+        out_d = any(in_d)
+        sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+        sub = getattr(sub, "jaxpr", sub)
+        if name == "pallas_call":
+            sub = None                     # opaque; outputs derive from ins
+        if sub is not None and hasattr(sub, "eqns"):
+            if len(sub.invars) == len(eqn.invars):
+                out = _audit(sub, in_d, entry, findings, depth + 1)
+                for ov, d in zip(eqn.outvars, out):
+                    derived[ov] = d
+                continue
+            # arity mismatch (unusual call convention): conservative
+            _audit(sub, [True] * len(sub.invars), entry, findings,
+                   depth + 1)
+        elif name == "cond":
+            outs = None
+            for br in eqn.params.get("branches", ()):
+                bj = getattr(br, "jaxpr", br)
+                t = _audit(bj, in_d[1:], entry, findings, depth + 1)
+                outs = t if outs is None else [a or b
+                                               for a, b in zip(outs, t)]
+            for ov, d in zip(eqn.outvars, outs or []):
+                derived[ov] = d
+            continue
+        for ov in eqn.outvars:
+            derived[ov] = out_d
+    return [get(v) for v in jaxpr.outvars]
+
+
+@ir_pass("I2", "effect/host audit: no callback/infeed-class primitives, no "
+              "argument-derived device_put boundaries, no unexplained "
+              "effects in hot-path jaxprs")
+def check_effects(entry: IREntry) -> Iterable[Finding]:
+    findings: list[Finding] = []
+    jaxpr = entry.jaxpr.jaxpr
+    _audit(jaxpr, [True] * len(jaxpr.invars), entry, findings)
+    effects = getattr(entry.jaxpr, "effects", None) or ()
+    if effects and not findings:
+        findings.append(Finding(
+            "I2", entry.path, 0, 0,
+            f"jaxpr carries unexplained effects {sorted(map(str, effects))} "
+            f"— a new effectful primitive reached the hot path",
+        ))
+    return findings

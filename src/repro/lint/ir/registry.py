@@ -1,0 +1,249 @@
+"""The IR entry-point registry: what gets traced, at which shapes.
+
+Two families:
+
+* ``mpgemm_entries`` — the kernel-facing mpGeMM impls (paper §5.1
+  vocabulary, mirroring benchmarks/crossover.py): {vlut, vlut_packed,
+  scalar_lut, mad_dense, mad_int8}, with the packed serving path traced in
+  BOTH fusion modes, each at representative token counts M. Shapes carry
+  (m_out, k, m_tokens, fused) meta so the I4 traffic pass can cross-check
+  against roofline.analysis.mpgemm_cost.
+* ``engine_entries`` — every `Engine.jit_entries()` /
+  `ModelDrafter.jit_entries()` surface, traced off real smoke-config
+  engines: the base chunked-prefill engine (prefill1 / decode /
+  chunk_verify), a ModelDrafter chain-spec engine (verify + drafter.*),
+  and a tree-spec engine (tree verify + compact).
+
+Tracing is `jax.make_jaxpr` only — nothing compiles, nothing executes, so
+the whole default registry traces in seconds on CPU.
+
+Determinism: traced graphs must be a pure function of (code, backend) or
+the I5 golden snapshots would flap. `pinned_trace_env()` therefore forces
+the §4 heuristic tiles (empty isolated autotune cache + measurement off +
+no VMEM-budget env override) and explicit backend-default mpGeMM dispatch
+for the duration of tracing.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import IREntry
+
+#: token counts every impl is traced at (the fast lane); M=16 is the chain
+#: verify across slots, M=1 the single-token decode column
+QUICK_MS = (1, 16)
+#: nightly adds the serving-burst shapes (chunk x slots, saturated burst)
+FULL_MS = (1, 16, 48, 256)
+#: representative layer shape: M_out x K (divisible by g=5 and g=4 packing)
+MPGEMM_SHAPE = (256, 1280)
+
+
+@contextlib.contextmanager
+def pinned_trace_env():
+    """Deterministic tracing context: heuristic tiles only (isolated empty
+    autotune cache, measurement disabled, no VMEM budget override) and
+    explicit backend-default dispatch."""
+    from repro.kernels import autotune, ops
+
+    saved = {
+        k: os.environ.pop(k, None)
+        for k in (autotune.TUNE_ENV, autotune.VMEM_BUDGET_ENV)
+    }
+    os.environ[autotune.TUNE_ENV] = "0"
+    tmp = tempfile.NamedTemporaryFile(
+        suffix=".json", prefix="ir_tiles_", delete=False
+    )
+    tmp.close()
+    os.unlink(tmp.name)                        # want an empty, absent cache
+    autotune.reset_default_cache(tmp.name)
+    try:
+        with ops.dispatch_override(
+            impl="decode" if ops.on_tpu() else "xla",
+            fusion="fused", interpret=False,
+        ):
+            yield
+    finally:
+        autotune.reset_default_cache()
+        if os.path.exists(tmp.name):
+            os.unlink(tmp.name)
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _packed_pair(m_out: int, k: int):
+    """(auto-packed, i2-packed) ternary weights for the mpGeMM traces —
+    fixed seed so constvars (if any) are stable."""
+    from repro.core import pack_weight, ternary_quantize
+
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((m_out, k)).astype(np.float32)
+    tw = ternary_quantize(jnp.asarray(w))
+    return (
+        pack_weight(tw.values, tw.scale, "auto"),
+        pack_weight(tw.values, tw.scale, "i2"),
+    )
+
+
+def mpgemm_entries(full: bool = False) -> list[IREntry]:
+    """Trace every mpGeMM impl x fusion combination at each M."""
+    from repro.core import (
+        mad_gemm, mad_gemm_int8, scalar_lut_gemm, vlut_gemm,
+    )
+    from repro.kernels import ops
+
+    m_out, k = MPGEMM_SHAPE
+    ms = FULL_MS if full else QUICK_MS
+    packed_impl = "decode" if ops.on_tpu() else "xla"
+    pw, pw_i2 = _packed_pair(m_out, k)
+    combos = [
+        ("vlut", vlut_gemm, pw_i2, {}),
+        ("vlut_packed_fused", ops.vlut_mpgemm, pw,
+         dict(impl=packed_impl, fusion="fused")),
+        ("vlut_packed_unfused", ops.vlut_mpgemm, pw,
+         dict(impl=packed_impl, fusion="unfused")),
+        ("scalar_lut", scalar_lut_gemm, pw_i2, {}),
+        ("mad_dense", mad_gemm, pw_i2, {}),
+        ("mad_int8", mad_gemm_int8, pw_i2, {}),
+    ]
+    # I4 ceilings, ~2x over the measured estimate/model ratio at the
+    # worst M in FULL_MS: the reference impls materialize the full LUT
+    # table (vlut peaks ~150x at M=256, scalar_lut ~50x) or the dense
+    # dequantized weight (mad_dense ~15x); the packed serving path and
+    # the int8 MAD stay within the DEFAULT_FACTOR=8 serving budget.
+    traffic_factors = {"vlut": 320.0, "scalar_lut": 112.0,
+                       "mad_dense": 32.0}
+    entries: list[IREntry] = []
+    with pinned_trace_env():
+        for name, fn, weight, kw in combos:
+            for m in ms:
+                a = jnp.zeros((k, m), jnp.float32)
+                jaxpr = jax.make_jaxpr(
+                    lambda w_, a_, fn=fn, kw=kw: fn(w_, a_, **kw)
+                )(weight, a)
+                entries.append(IREntry(
+                    name=f"mpgemm/{name}/M{m}",
+                    jaxpr=jaxpr,
+                    kind="mpgemm",
+                    meta=dict(
+                        impl=name, m_out=m_out, k=k, m_tokens=m,
+                        fused="unfused" not in name,
+                        **({"traffic_factor": traffic_factors[name]}
+                           if name in traffic_factors else {}),
+                    ),
+                ))
+    return entries
+
+
+def _smoke_model():
+    from repro.configs import get_config
+    from repro.models import init_lm, pack_params
+
+    cfg = get_config("smollm-360m", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    return cfg, params
+
+
+def engine_entries(full: bool = False) -> list[IREntry]:
+    """Trace the serving hot path: every distinct `Engine.jit_entries()` /
+    `ModelDrafter.jit_entries()` name across the base, chain-spec
+    (ModelDrafter oracle), and tree-spec engine configurations."""
+    from repro.models import init_cache
+    from repro.serve import Engine
+    from repro.spec import SpecConfig
+
+    cfg, params = _smoke_model()
+    slots, max_len, chunk, k_draft = 2, 64, 16, 2
+    entries: list[IREntry] = []
+
+    def trace(name: str, fn, *args, kind: str = "engine", **meta):
+        entries.append(IREntry(
+            name=f"engine/{name}", jaxpr=jax.make_jaxpr(fn)(*args),
+            kind=kind, meta=meta,
+        ))
+
+    with pinned_trace_env():
+        base = Engine(params, cfg, max_slots=slots, max_len=max_len,
+                      prefill_chunk=chunk)
+        be = base.jit_entries()
+        t1 = jnp.zeros((1, 16), jnp.int32)
+        c1 = init_cache(cfg, 1, 16)
+        trace("prefill1", be["prefill1"], params, c1, t1)
+        trace("decode", be["decode"], params, base.cache,
+              jnp.zeros((slots, 1), jnp.int32))
+        trace("chunk_verify", be["chunk_verify"], params, base.cache,
+              jnp.zeros((slots, chunk), jnp.int32),
+              jnp.zeros((slots,), jnp.int32))
+
+        spec_eng = Engine(
+            params, cfg, max_slots=slots, max_len=max_len,
+            spec=SpecConfig(k=k_draft, drafter="model",
+                            draft_params=params, draft_cfg=cfg),
+        )
+        se = spec_eng.jit_entries()
+        trace("verify", se["verify"], params, spec_eng.cache,
+              jnp.zeros((slots, k_draft + 1), jnp.int32))
+        trace("drafter.prefill", se["drafter.prefill"], params, c1, t1,
+              kind="drafter")
+        trace("drafter.verify", se["drafter.verify"], params,
+              spec_eng.drafter.cache,
+              jnp.zeros((slots, k_draft + 1), jnp.int32), kind="drafter")
+        trace("drafter.decode", se["drafter.decode"], params,
+              spec_eng.drafter.cache, jnp.zeros((slots, 1), jnp.int32),
+              kind="drafter")
+
+        tree_eng = Engine(
+            params, cfg, max_slots=slots, max_len=max_len,
+            spec=SpecConfig(k=k_draft, drafter="ngram", tree=(2,)),
+        )
+        te = tree_eng.jit_entries()
+        n_nodes = tree_eng._tree.n_nodes
+        trace("tree_verify", te["verify"], params, tree_eng.cache,
+              jnp.zeros((slots, n_nodes), jnp.int32))
+        trace("compact", te["compact"], tree_eng.cache,
+              jnp.zeros((slots,), jnp.int32),
+              jnp.zeros((slots, n_nodes), jnp.int32),
+              jnp.zeros((slots,), jnp.int32))
+
+        if full:
+            from repro.configs import get_config
+            from repro.models import init_lm, pack_params
+
+            mla_cfg = get_config("deepseek-v3-671b", smoke=True)
+            mla_params = pack_params(
+                init_lm(jax.random.PRNGKey(0), mla_cfg), mla_cfg
+            )
+            mla = Engine(mla_params, mla_cfg, max_slots=slots,
+                         max_len=max_len, prefill_chunk=chunk)
+            me = mla.jit_entries()
+            entries.append(IREntry(
+                name="engine/mla_decode",
+                jaxpr=jax.make_jaxpr(me["decode"])(
+                    mla_params, mla.cache, jnp.zeros((slots, 1), jnp.int32)
+                ),
+                kind="engine",
+            ))
+            entries.append(IREntry(
+                name="engine/mla_chunk_verify",
+                jaxpr=jax.make_jaxpr(me["chunk_verify"])(
+                    mla_params, mla.cache,
+                    jnp.zeros((slots, chunk), jnp.int32),
+                    jnp.zeros((slots,), jnp.int32),
+                ),
+                kind="engine",
+            ))
+    return entries
+
+
+def default_entries(full: bool = False) -> list[IREntry]:
+    """The registry `python -m repro.lint --ir` runs: every mpGeMM
+    impl x fusion combination plus every serving entry point."""
+    return mpgemm_entries(full=full) + engine_entries(full=full)

@@ -1,0 +1,163 @@
+"""I5 — golden jaxpr signatures: structural snapshots of the hot path.
+
+A refactor that changes the traced graph of a serving entry point —
+different primitive sequence, different shapes, an extra materialization —
+should be a *reviewable diff*, not a silent perf change discovered three
+PRs later by a benchmark. Each registry entry gets a stable structural
+hash over (primitive sequence + input/output avals + canonicalized
+static params), recursing through nested call bodies; object identities,
+variable names, and trace-order artifacts do not enter the hash.
+
+Snapshots live under ``tests/ir_snapshots/<backend>/<entry>.json`` and
+carry the hash plus per-primitive counts, so a mismatch's diff shows
+*what kind* of structure changed. Workflow:
+
+    python -m repro.lint --ir                     # gate: hash must match
+    python -m repro.lint --ir --update-snapshots  # intentional change:
+                                                  # rewrite + commit
+
+Findings: missing snapshot (new entry never snapshotted) and stale
+snapshot (hash mismatch, message includes the primitive-count delta).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from collections import Counter
+from typing import Iterable
+
+import jax
+
+from ..core import Finding
+from .core import IREntry, fmt_aval, ir_pass, subjaxprs
+
+#: default snapshot root (keyed by backend inside)
+SNAPSHOT_ROOT = os.path.join("tests", "ir_snapshots")
+
+
+def snapshot_dir(root: str | None = None) -> str:
+    return os.path.join(root or SNAPSHOT_ROOT, jax.default_backend())
+
+
+def _canon_param(v) -> str:
+    """Stable rendering of one static param value (no object ids)."""
+    if hasattr(v, "eqns") or hasattr(getattr(v, "jaxpr", None), "eqns"):
+        return "<jaxpr>"  # nested bodies are hashed by the recursion
+    if isinstance(v, (list, tuple)):
+        return "(" + ",".join(_canon_param(x) for x in v) + ")"
+    if isinstance(v, dict):
+        return "{" + ",".join(
+            f"{k}:{_canon_param(v[k])}" for k in sorted(map(str, v))
+        ) + "}"
+    if isinstance(v, (int, float, bool, str, bytes, type(None))):
+        return repr(v)
+    if callable(v):
+        return getattr(v, "__name__", type(v).__name__)
+    r = repr(v)
+    return r if "0x" not in r else type(v).__name__
+
+
+def _sig_lines(jaxpr, out: list[str], depth: int = 0) -> None:
+    pad = "." * depth
+    out.append(
+        f"{pad}in:{','.join(fmt_aval(v.aval) for v in jaxpr.invars)}"
+    )
+    for eqn in jaxpr.eqns:
+        ins = ",".join(
+            fmt_aval(v.aval) if hasattr(v, "aval") else "lit"
+            for v in eqn.invars
+        )
+        outs = ",".join(fmt_aval(v.aval) for v in eqn.outvars)
+        params = ";".join(
+            f"{k}={_canon_param(v)}" for k, v in sorted(eqn.params.items())
+        )
+        out.append(f"{pad}{eqn.primitive.name}({ins})->({outs})[{params}]")
+        for sub in subjaxprs(eqn):
+            _sig_lines(sub, out, depth + 1)
+    out.append(
+        f"{pad}out:{','.join(fmt_aval(v.aval) for v in jaxpr.outvars)}"
+    )
+
+
+def signature(closed_jaxpr) -> tuple[str, dict]:
+    """-> (sha256 structural hash, {primitive: recursive count})."""
+    lines: list[str] = []
+    _sig_lines(closed_jaxpr.jaxpr, lines)
+    digest = hashlib.sha256("\n".join(lines).encode()).hexdigest()
+    counts: Counter = Counter()
+
+    def count(j):
+        for eqn in j.eqns:
+            counts[eqn.primitive.name] += 1
+            for sub in subjaxprs(eqn):
+                count(sub)
+
+    count(closed_jaxpr.jaxpr)
+    return digest, dict(sorted(counts.items()))
+
+
+def _snapshot_path(entry: IREntry, root: str | None) -> str:
+    fname = entry.name.replace("/", "__") + ".json"
+    return os.path.join(snapshot_dir(root), fname)
+
+
+def write_snapshot(entry: IREntry, root: str | None = None) -> str:
+    digest, counts = signature(entry.jaxpr)
+    path = _snapshot_path(entry, root)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    jaxpr = entry.jaxpr.jaxpr
+    payload = {
+        "entry": entry.name,
+        "backend": jax.default_backend(),
+        "hash": digest,
+        "n_eqns": sum(counts.values()),
+        "primitives": counts,
+        "invars": [fmt_aval(v.aval) for v in jaxpr.invars],
+        "outvars": [fmt_aval(v.aval) for v in jaxpr.outvars],
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def _count_delta(old: dict, new: dict) -> str:
+    keys = sorted(set(old) | set(new))
+    parts = [
+        f"{k}: {old.get(k, 0)}->{new.get(k, 0)}"
+        for k in keys if old.get(k, 0) != new.get(k, 0)
+    ]
+    return ", ".join(parts) if parts else "same primitive counts"
+
+
+@ir_pass("I5", "golden jaxpr signatures: structural hash vs the committed "
+              "snapshot under tests/ir_snapshots/ (update with "
+              "--update-snapshots)")
+def check_snapshots(
+    entry: IREntry,
+    snapshot_root: str | None = None,
+    update_snapshots: bool = False,
+) -> Iterable[Finding]:
+    if update_snapshots:
+        write_snapshot(entry, snapshot_root)
+        return
+    path = _snapshot_path(entry, snapshot_root)
+    if not os.path.exists(path):
+        yield Finding(
+            "I5", entry.path, 0, 0,
+            f"no golden snapshot at {path} — run `python -m repro.lint "
+            f"--ir --update-snapshots` and commit the result",
+        )
+        return
+    with open(path, encoding="utf-8") as f:
+        want = json.load(f)
+    digest, counts = signature(entry.jaxpr)
+    if digest != want.get("hash"):
+        yield Finding(
+            "I5", entry.path, 0, 0,
+            f"traced graph diverged from golden snapshot {path} "
+            f"({_count_delta(want.get('primitives', {}), counts)}); if "
+            f"intentional, re-run with --update-snapshots and commit the "
+            f"diff",
+        )

@@ -172,20 +172,24 @@ def _vmem_check(
     tiles = _tile_defaults(fn)
     if set(tiles) != {"bm", "bn", "bkg"}:
         return
-    from repro.kernels.autotune import VMEM_BUDGET_BYTES, tile_vmem_bytes
+    # the budget comes from the autotuner's own env-overridable helper — a
+    # single source of truth, so REPRO_VLUT_VMEM_BUDGET re-tunes and
+    # re-lints coherently and the two can never drift apart
+    from repro.kernels.autotune import tile_vmem_bytes, vmem_budget_bytes
 
+    budget = vmem_budget_bytes()
     fused = "fused" in name or _kw(call, "scratch_shapes") is not None
     for g in _SUPPORTED_G:
         need = tile_vmem_bytes(
             g, impl, tiles["bm"], tiles["bn"], tiles["bkg"], fused=fused
         )
-        if need > VMEM_BUDGET_BYTES:
+        if need > budget:
             yield Finding(
                 "R5", mod.path, call.lineno, call.col_offset,
                 f"default tile (bm={tiles['bm']}, bn={tiles['bn']}, "
                 f"bkg={tiles['bkg']}) of `{fn.name}` needs {need} B of "
                 f"VMEM at g={g} ({impl}, fused={fused}) — over the "
-                f"autotune budget of {VMEM_BUDGET_BYTES} B; shrink the "
+                f"autotune budget of {budget} B; shrink the "
                 f"default or route through autotune.get_tiles",
             )
             break  # one budget finding per call site is enough

@@ -322,7 +322,7 @@ def decode_step(params, tokens, cache, cfg, *, mode="serve"):
 
 
 def verify_step(params, tokens, cache, cfg, *, mode="serve", tree=None,
-                prefill_resume=False):
+                prefill_resume=False, logit_cols=None):
     """Batched multi-token decode — the speculative-verification step.
 
     tokens: (B, S) int32 candidate tokens per slot (column 0 is the last
@@ -343,11 +343,24 @@ def verify_step(params, tokens, cache, cfg, *, mode="serve", tree=None,
 
     → (logits (B, S, V), new_cache with idx advanced by S). Rejected suffixes
     are undone with rollback_cache. S is expected small (draft_k + 1, or the
-    tree's node count): the full (B, S, V) logits are materialized."""
+    tree's node count): the full (B, S, V) logits are materialized.
+
+    logit_cols ((B,) int32): read path for chunked prefill, where each slot
+    needs the distribution after exactly one position in the chunk (the last
+    prompt token, or nothing at all mid-prompt). The head matmul runs on the
+    single gathered hidden state per slot — (B, 1, d) @ (d, V) instead of
+    (B, S, d) @ (d, V) — and the return is (logits (B, V), new_cache). The
+    KV-cache write path is identical either way."""
     h, new_cache, _ = lm_hidden(
         params, tokens, cfg, mode=mode, cache=cache, verify=True, tree=tree,
         prefill_resume=prefill_resume,
     )
+    if logit_cols is not None:
+        h_sel = jnp.take_along_axis(
+            h, logit_cols[:, None, None].astype(jnp.int32), axis=1
+        )  # (B, 1, d) — broadcasts over d
+        logits = _head_matmul(params, h_sel, cfg)[:, 0]
+        return logits, new_cache
     logits = _head_matmul(params, h, cfg)
     return logits, new_cache
 

@@ -251,10 +251,15 @@ class Engine:
         self._decode_rides = spec is None and not any(
             s.mixer == "mla" for s in cfg.layer_specs()
         )
+        # logit_cols: each slot only ever needs the distribution after ONE
+        # chunk position (its last real token), so the head matmul runs on
+        # (B, 1, d) gathered hidden states, never (B, chunk, V) — non-final
+        # chunks skip the full-vocab projection entirely
         self._chunk_verify = (
             jax.jit(
-                lambda p, c, t: model_verify(
-                    p, t, c, cfg, mode=mode, prefill_resume=True
+                lambda p, c, t, col: model_verify(
+                    p, t, c, cfg, mode=mode, prefill_resume=True,
+                    logit_cols=col,
                 ),
                 donate_argnums=(1,),
             )
@@ -542,12 +547,10 @@ class Engine:
                 new_idx[slot] += 1          # idx_vector holds last_token's pos
                 decode_slots.append(slot)
         with kernel_ops.dispatch_override(**self._mpgemm):
-            logits, cache = self._chunk_verify(
-                self.params, self.cache, jnp.asarray(tokens)
-            )
-        rows = jnp.take_along_axis(
-            logits, jnp.asarray(col)[:, None, None], axis=1
-        )[:, 0]                                                  # (B, V)
+            rows, cache = self._chunk_verify(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(col, np.int32),
+            )                                                    # rows: (B, V)
         nxt = np.asarray(self._sample(rows))
         now = time.perf_counter()
         self.chunk_steps += 1
