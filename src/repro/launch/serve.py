@@ -13,6 +13,10 @@ the first depths) in one flattened pass, adding a nodes/step column.
 batched mixed step carrying every prefilling slot's next N-token chunk plus
 the decode rows, so the Vec-LUT kernels see parallel tokens every tick;
 --token-budget caps the real tokens scheduled per tick.
+--page-size N switches the KV cache to the paged layout (block tables over a
+physical page pool, serve.paging) with radix prompt-prefix sharing; --kv-pages
+sizes the pool (out-of-pages requests queue instead of rejecting) and
+--offload-pages bounds the host-RAM tier for cold prefix pages.
 
 Observability (repro.obs) is on by default (--no-obs disables): the periodic
 stats line (--stats-interval S) and the summary's latency/acceptance columns
@@ -60,6 +64,16 @@ def main():
     ap.add_argument("--token-budget", type=int, default=0,
                     help="cap on real tokens scheduled per chunked tick "
                          "(0 = unlimited; needs --prefill-chunk)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV: tokens per page (0 = dense slot cache); "
+                         "enables radix prompt-prefix sharing")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="paged KV pool size incl. the null page "
+                         "(0 = auto: slots*max_len/page_size + 1; "
+                         "needs --page-size)")
+    ap.add_argument("--offload-pages", type=int, default=0,
+                    help="host-RAM offload tier capacity in pages for cold "
+                         "prefix pages (0 = drop instead; needs --page-size)")
     ap.add_argument("--no-obs", action="store_true",
                     help="disable the observability layer (metrics + trace)")
     ap.add_argument("--stats-interval", type=float, default=0.0,
@@ -74,6 +88,8 @@ def main():
         ap.error("--spec-adaptive/--spec-tree require --spec-k N (N >= 1)")
     if args.token_budget and not args.prefill_chunk:
         ap.error("--token-budget requires --prefill-chunk N (N >= 1)")
+    if (args.kv_pages or args.offload_pages) and not args.page_size:
+        ap.error("--kv-pages/--offload-pages require --page-size N (N >= 1)")
     if args.spec_adaptive and args.spec_tree:
         ap.error("--spec-tree and --spec-adaptive are mutually exclusive")
     if args.no_obs and (args.stats_interval or args.metrics_out
@@ -101,11 +117,19 @@ def main():
         metrics_out=args.metrics_out or None,
         trace_out=args.trace_out or None,
     )
+    paged = None
+    if args.page_size:
+        from repro.serve import PagedKVConfig
+
+        paged = PagedKVConfig(
+            page_size=args.page_size, n_pages=args.kv_pages,
+            host_offload_pages=args.offload_pages,
+        )
     engine = Engine(
         params, cfg, max_slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, spec=spec,
         prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
-        obs=obs_cfg,
+        paged_kv=paged, obs=obs_cfg,
     )
     sched = ContinuousBatchingScheduler(engine)
     rng = np.random.default_rng(0)
@@ -147,6 +171,12 @@ def main():
     if stats.spec_steps and args.spec_tree:
         spec_cols += f" nodes/step={stats.nodes_per_step:.1f}"
     rej_cols = f" rejected={stats.rejected}" if stats.rejected else ""
+    paged_cols = (
+        f" pages={engine.pager.free_pages}/{engine.pager.total_pages}"
+        f" prefix_hit={stats.prefix_hit_tokens}tok"
+        f"/{stats.prefix_hit_requests}req"
+        if engine.pager is not None else ""
+    )
     chunk_cols = (
         f" chunk_steps={stats.chunk_steps} pad={stats.prefill_pad_tokens}"
         if args.prefill_chunk else ""
@@ -173,7 +203,7 @@ def main():
         f"completed={stats.completed}/{args.requests} "
         f"throughput={stats.throughput_tok_s:.1f} tok/s "
         f"(prefill {stats.prefill_tok_s:.1f}, decode {stats.decode_tok_s:.1f})"
-        f"{ttft_col}{spec_cols}{chunk_cols}{rej_cols}"
+        f"{ttft_col}{spec_cols}{chunk_cols}{paged_cols}{rej_cols}"
     )
     for path in obs.finalize():
         print(f"wrote {path}")

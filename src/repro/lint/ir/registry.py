@@ -213,6 +213,36 @@ def engine_entries(full: bool = False) -> list[IREntry]:
               jnp.zeros((slots, n_nodes), jnp.int32),
               jnp.zeros((slots,), jnp.int32))
 
+        # paged KV: decode/chunk_verify gather K/V through the block table,
+        # plus the host pager's two flush entries (table broadcast + scrub)
+        # and the tree-compact walk over a paged pool
+        from repro.serve import PagedKVConfig
+
+        paged_cfg = PagedKVConfig(page_size=16)
+        paged = Engine(params, cfg, max_slots=slots, max_len=max_len,
+                       prefill_chunk=chunk, paged_kv=paged_cfg)
+        pe = paged.jit_entries()
+        trace("paged_decode", pe["decode"], params, paged.cache,
+              jnp.zeros((slots, 1), jnp.int32))
+        trace("paged_chunk_verify", pe["chunk_verify"], params, paged.cache,
+              jnp.zeros((slots, chunk), jnp.int32),
+              jnp.zeros((slots,), jnp.int32))
+        trace("set_tab", pe["set_tab"], paged.cache,
+              jnp.zeros((slots, max_len // paged_cfg.page_size), jnp.int32))
+        trace("scrub", pe["scrub"], paged.cache,
+              jnp.zeros((paged_cfg.scrub_batch,), jnp.int32))
+
+        paged_tree = Engine(
+            params, cfg, max_slots=slots, max_len=max_len,
+            spec=SpecConfig(k=k_draft, drafter="ngram", tree=(2,)),
+            paged_kv=paged_cfg,
+        )
+        pt = paged_tree.jit_entries()
+        trace("paged_compact", pt["compact"], paged_tree.cache,
+              jnp.zeros((slots,), jnp.int32),
+              jnp.zeros((slots, paged_tree._tree.n_nodes), jnp.int32),
+              jnp.zeros((slots,), jnp.int32))
+
         if full:
             from repro.configs import get_config
             from repro.models import init_lm, pack_params
@@ -240,6 +270,17 @@ def engine_entries(full: bool = False) -> list[IREntry]:
                 ),
                 kind="engine",
             ))
+            # paged MLA: the compressed-KV pool gathers through the same
+            # block tables (ckv/krope leaves, no slot_pos — no scrub pass)
+            pmla = Engine(mla_params, mla_cfg, max_slots=slots,
+                          max_len=max_len, prefill_chunk=chunk,
+                          paged_kv=paged_cfg)
+            pme = pmla.jit_entries()
+            trace("paged_mla_decode", pme["decode"], mla_params, pmla.cache,
+                  jnp.zeros((slots, 1), jnp.int32))
+            trace("paged_mla_chunk_verify", pme["chunk_verify"], mla_params,
+                  pmla.cache, jnp.zeros((slots, chunk), jnp.int32),
+                  jnp.zeros((slots,), jnp.int32))
     return entries
 
 

@@ -20,6 +20,12 @@ from .decoder import (
 )
 from .encdec import encdec_init, encdec_loss, encode
 from .convert import pack_params, packed_param_bytes, param_count
+from .paged import (
+    gather_page,
+    restore_page,
+    scrub_pages,
+    set_block_tables,
+)
 
 __all__ = [
     "linear_apply", "linear_init", "rmsnorm_apply", "rope",
@@ -29,4 +35,5 @@ __all__ = [
     "reset_slot_idx", "rollback_cache", "scatter_slot_cache", "verify_step",
     "encdec_init", "encdec_loss", "encode",
     "pack_params", "packed_param_bytes", "param_count",
+    "gather_page", "restore_page", "scrub_pages", "set_block_tables",
 ]

@@ -159,10 +159,33 @@ def attn_init(rng, cfg, spec) -> Params:
     return p
 
 
-def attn_cache_init(cfg, spec, batch: int, max_len: int, dtype) -> Params:
-    """Ring-buffer cache for windowed layers, full buffer otherwise."""
-    buf = min(spec.window, max_len) if spec.window else max_len
+def attn_cache_init(
+    cfg, spec, batch: int, max_len: int, dtype,
+    page_size: int = 0, n_pages: int = 0,
+) -> Params:
+    """Ring-buffer cache for windowed layers, full buffer otherwise.
+
+    page_size > 0 switches to the paged layout (see models.paged): one
+    physical (n_pages, page_size, ...) pool shared across slots plus a
+    per-slot block table, with page 0 reserved as the read-safe null page.
+    Windowed layers keep in-window history a page drop would lose — they
+    are genuinely non-pageable and refused here."""
     kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if page_size:
+        if spec.window:
+            raise ValueError(
+                "windowed (ring-buffer) attention layers are not pageable: "
+                "the ring overwrites in place, so page-granular ownership "
+                "cannot represent their in-window history"
+            )
+        return {
+            "k": jnp.zeros((n_pages, page_size, kv, hd), dtype),
+            "v": jnp.zeros((n_pages, page_size, kv, hd), dtype),
+            "slot_pos": jnp.full((n_pages, page_size), -1, jnp.int32),
+            "tab": jnp.zeros((batch, max_len // page_size), jnp.int32),
+            "idx": jnp.zeros((batch,), jnp.int32),
+        }
+    buf = min(spec.window, max_len) if spec.window else max_len
     return {
         "k": jnp.zeros((batch, buf, kv, hd), dtype),
         "v": jnp.zeros((batch, buf, kv, hd), dtype),
@@ -246,6 +269,49 @@ def attn_apply(
                 chunk=cfg.attn_chunk, dense_max=cfg.attn_dense_max,
             )
         new_cache = None
+    elif "tab" in cache:
+        # ---- paged cache: physical page pool + per-slot block table ------
+        # (models.paged) — writes map logical indices through the table
+        # (unmapped/out-of-range targets dropped), reads attend the gathered
+        # logical view with the SAME position-masked sdpa as the dense path.
+        from .paged import page_scatter, page_view
+
+        tab = cache["tab"]
+        if tree is not None:
+            # one slot per tree node (siblings share positions, not slots)
+            slots = start[:, None] + jnp.arange(s, dtype=jnp.int32)
+        else:
+            slots = positions
+        ck_pool = page_scatter(cache["k"], tab, slots, k)
+        cv_pool = page_scatter(cache["v"], tab, slots, v)
+        sp_pool = page_scatter(cache["slot_pos"], tab, slots, positions)
+        new_cache = {
+            "k": ck_pool, "v": cv_pool, "slot_pos": sp_pool,
+            "tab": tab, "idx": start + s,
+        }
+        if s == 1 or verify:
+            ck = page_view(ck_pool, tab)
+            cv = page_view(cv_pool, tab)
+            sp = page_view(sp_pool, tab)
+            gate = (
+                tree_step_gate(tree, start, s, ck.shape[1])
+                if tree is not None else None
+            )
+            out = sdpa(
+                q, ck, cv, positions, sp,
+                causal=causal, window=spec.window,
+                softcap=cfg.attn_logit_softcap,
+                chunk=cfg.attn_chunk, dense_max=cfg.attn_dense_max,
+                extra_mask=gate,
+            )
+        else:
+            # prefill: attend within the incoming sequence itself.
+            out = sdpa(
+                q, k, v, positions, positions,
+                causal=causal, window=spec.window,
+                softcap=cfg.attn_logit_softcap,
+                chunk=cfg.attn_chunk, dense_max=cfg.attn_dense_max,
+            )
     else:
         buf = cache["k"].shape[1]
         bidx = jnp.arange(b, dtype=jnp.int32)[:, None]

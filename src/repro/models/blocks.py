@@ -39,13 +39,27 @@ def block_init(rng, cfg, spec) -> Params:
     return p
 
 
-def block_cache_init(cfg, spec, batch: int, max_len: int, dtype, enc_len: int = 0):
+def block_cache_init(
+    cfg, spec, batch: int, max_len: int, dtype, enc_len: int = 0,
+    page_size: int = 0, n_pages: int = 0,
+):
+    if page_size and spec.mixer == "ssm":
+        raise ValueError(
+            "ssm layers carry recurrent state, not per-position KV — there "
+            "is nothing page-granular to own, so paged caching refuses them"
+        )
     cache_init = {
         "attn": attn_cache_init,
         "mla": mla_cache_init,
         "ssm": ssm_cache_init,
     }[spec.mixer]
-    c = cache_init(cfg, spec, batch, max_len, dtype)
+    if page_size:
+        c = cache_init(
+            cfg, spec, batch, max_len, dtype,
+            page_size=page_size, n_pages=n_pages,
+        )
+    else:
+        c = cache_init(cfg, spec, batch, max_len, dtype)
     if spec.cross_attn:
         kv, hd = cfg.n_kv_heads, cfg.head_dim
         c["xk"] = jnp.zeros((batch, enc_len, kv, hd), dtype)

@@ -67,10 +67,16 @@ def _stage_init(rng, cfg, pattern, reps: int) -> Params:
     return out
 
 
-def _stage_cache_init(cfg, pattern, reps, batch, max_len, dtype, enc_len):
+def _stage_cache_init(
+    cfg, pattern, reps, batch, max_len, dtype, enc_len,
+    page_size=0, n_pages=0,
+):
     out = {}
     for pos, spec in enumerate(pattern):
-        c1 = block_cache_init(cfg, spec, batch, max_len, dtype, enc_len)
+        c1 = block_cache_init(
+            cfg, spec, batch, max_len, dtype, enc_len,
+            page_size=page_size, n_pages=n_pages,
+        )
         out[f"b{pos}"] = jax.tree.map(
             lambda l: jnp.repeat(l[None], reps, axis=0), c1
         )
@@ -188,10 +194,34 @@ def init_lm(rng, cfg) -> Params:
     return p
 
 
-def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, enc_len: int = 0):
+def init_cache(
+    cfg, batch: int, max_len: int, dtype=jnp.bfloat16, enc_len: int = 0,
+    page_size: int = 0, n_pages: int = 0,
+):
+    """page_size > 0 builds the paged layout (models.paged): per-layer
+    physical page pools of ``n_pages`` pages (page 0 reserved null) shared
+    across slots, plus per-slot (batch, max_len // page_size) block tables.
+    Every serving entry point (decode_step / verify_step / compact_tree_cache
+    / rollback_cache / reset_slot_idx) dispatches on the cache structure, so
+    paged and dense engines share the same jitted functions."""
+    if page_size:
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len ({max_len}) must be a multiple of page_size "
+                f"({page_size}) — partial trailing pages would break the "
+                "block-table logical<->physical mapping"
+            )
+        if n_pages < 2:
+            raise ValueError(
+                f"n_pages ({n_pages}) must be >= 2: page 0 is the reserved "
+                "null page, so at least one allocatable page is needed"
+            )
     stages = compress_layout(cfg.layer_specs())
     return [
-        _stage_cache_init(cfg, pat, reps, batch, max_len, dtype, enc_len)
+        _stage_cache_init(
+            cfg, pat, reps, batch, max_len, dtype, enc_len,
+            page_size=page_size, n_pages=n_pages,
+        )
         for (pat, reps) in stages
     ]
 
@@ -456,7 +486,13 @@ def compact_tree_cache(cache, pos, sel, take):
 
     Only the per-length-axis cache leaves (attn k/v/slot_pos, MLA
     ckv/krope) are touched; everything is a (B, N)-window gather/scatter,
-    never a full-length pass. idx is left to rollback_cache."""
+    never a full-length pass. idx is left to rollback_cache.
+
+    Paged caches (block dicts carrying a ``tab`` leaf — models.paged) route
+    through `paged.compact_paged_block`: the same (B, N)-window gather/
+    scatter, with the logical src/dst indices mapped to physical
+    (page, offset) pairs through the block table — tree compaction is a
+    remap of the winner nodes' page-resident entries, never a page copy."""
     pos = pos.astype(jnp.int32)
     sel = sel.astype(jnp.int32)
     take = take.astype(jnp.int32)
@@ -465,8 +501,7 @@ def compact_tree_cache(cache, pos, sel, take):
     dst = pos[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]  # (B, N)
     live = jnp.arange(n, dtype=jnp.int32)[None, :] < take[:, None]
 
-    def fix(path, leaf):
-        key = getattr(path[-1], "key", None)
+    def fix(key, leaf):
         if key not in ("k", "v", "slot_pos", "ckv", "krope"):
             return leaf                  # idx (rollback's job), cross xk/xv
         b = leaf.shape[1]
@@ -485,7 +520,23 @@ def compact_tree_cache(cache, pos, sel, take):
         # see test_spec.py boundary regressions), dropping is exact
         return leaf.at[:, bidx, dst].set(gathered, mode="drop")
 
-    return jax.tree_util.tree_map_with_path(fix, cache)
+    def walk(node):
+        if isinstance(node, dict):
+            if "tab" in node:
+                from .paged import compact_paged_block
+
+                return compact_paged_block(node, src, dst, live)
+            return {
+                k: walk(v) if isinstance(v, (dict, list, tuple))
+                else fix(k, v)
+                for k, v in node.items()
+            }
+        if isinstance(node, (list, tuple)):
+            out = [walk(v) for v in node]
+            return tuple(out) if isinstance(node, tuple) else out
+        return node
+
+    return walk(cache)
 
 
 def rollback_cache(cache, new_idx):

@@ -47,8 +47,22 @@ def mla_init(rng, cfg, spec) -> Params:
     }
 
 
-def mla_cache_init(cfg, spec, batch: int, max_len: int, dtype) -> Params:
+def mla_cache_init(
+    cfg, spec, batch: int, max_len: int, dtype,
+    page_size: int = 0, n_pages: int = 0,
+) -> Params:
     _, kvl, _, rp, _ = _dims(cfg)
+    if page_size:
+        # paged layout (models.paged): shared latent page pool + per-slot
+        # block table; page 0 reserved as the null page. No slot_pos leaf —
+        # the MLA cache's index-as-position convention survives paging
+        # because pages are gathered back into logical order for reads.
+        return {
+            "ckv": jnp.zeros((n_pages, page_size, kvl), dtype),
+            "krope": jnp.zeros((n_pages, page_size, rp), dtype),
+            "tab": jnp.zeros((batch, max_len // page_size), jnp.int32),
+            "idx": jnp.zeros((batch,), jnp.int32),
+        }
     return {
         "ckv": jnp.zeros((batch, max_len, kvl), dtype),
         "krope": jnp.zeros((batch, max_len, rp), dtype),
@@ -152,37 +166,57 @@ def mla_apply(
     q_nope, q_rope, ckv, k_rope = _latents(p, x, cfg, mode, positions)
 
     new_cache = None
+    ckv_cached = krope_cached = None   # logical (B, L, ·) read views
     if cache is not None:
-        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
         if tree is not None:                        # one slot per tree node
             slots = start[:, None] + jnp.arange(s, dtype=jnp.int32)
         else:
             slots = positions                                         # full buffer
-        # mode="drop": a multi-token write whose position passes the buffer
-        # end (mask-padded chunk tails, decode-rider pad columns) is
-        # discarded — XLA's default clamp would clobber the last cache
-        # entry, and rollback (idx-only) could never undo it
-        new_cache = {
-            "ckv": shard_act(
-                cache["ckv"].at[bidx, slots].set(
-                    ckv.astype(cache["ckv"].dtype), mode="drop"
+        if "tab" in cache:
+            # paged cache (models.paged): the latent write maps logical
+            # indices through the block table (unmapped / out-of-range
+            # targets dropped — same semantics as the dense mode="drop"),
+            # and reads gather the logical view so index-as-position holds.
+            from .paged import page_scatter, page_view
+
+            tab = cache["tab"]
+            new_cache = {
+                "ckv": page_scatter(cache["ckv"], tab, slots, ckv),
+                "krope": page_scatter(cache["krope"], tab, slots, k_rope),
+                "tab": tab,
+                "idx": start + s,
+            }
+            ckv_cached = page_view(new_cache["ckv"], tab)
+            krope_cached = page_view(new_cache["krope"], tab)
+        else:
+            bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+            # mode="drop": a multi-token write whose position passes the
+            # buffer end (mask-padded chunk tails, decode-rider pad columns)
+            # is discarded — XLA's default clamp would clobber the last
+            # cache entry, and rollback (idx-only) could never undo it
+            new_cache = {
+                "ckv": shard_act(
+                    cache["ckv"].at[bidx, slots].set(
+                        ckv.astype(cache["ckv"].dtype), mode="drop"
+                    ),
+                    "kv_cache",
                 ),
-                "kv_cache",
-            ),
-            "krope": shard_act(
-                cache["krope"].at[bidx, slots].set(
-                    k_rope.astype(cache["krope"].dtype), mode="drop"
+                "krope": shard_act(
+                    cache["krope"].at[bidx, slots].set(
+                        k_rope.astype(cache["krope"].dtype), mode="drop"
+                    ),
+                    "kv_cache",
                 ),
-                "kv_cache",
-            ),
-            "idx": start + s,
-        }
+                "idx": start + s,
+            }
+            ckv_cached = new_cache["ckv"]
+            krope_cached = new_cache["krope"]
 
     if cache is not None and verify and prefill_resume and s > 1:
         # ---- chunked-prefill resume: naive expansion over the cache ------
-        k_nope, v = _expand_kv(p, new_cache["ckv"], cfg, mode)
-        L = new_cache["ckv"].shape[1]
-        k_rope_all = new_cache["krope"]                              # (B,L,rp)
+        k_nope, v = _expand_kv(p, ckv_cached, cfg, mode)
+        L = ckv_cached.shape[1]
+        k_rope_all = krope_cached                                    # (B,L,rp)
         k = jnp.concatenate(
             [k_nope,
              jnp.broadcast_to(k_rope_all[:, :, None, :], (b, L, h, rp))],
@@ -203,8 +237,8 @@ def mla_apply(
         # ---- absorbed decode over the latent cache -----------------------
         wkv_b = _wkv_b_dense(p, cfg, jnp.float32)                    # (kvl,H,nope+vd)
         w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
-        ckv_all = new_cache["ckv"].astype(jnp.float32)               # (B,L,kvl)
-        krope_all = new_cache["krope"].astype(jnp.float32)           # (B,L,rp)
+        ckv_all = ckv_cached.astype(jnp.float32)                     # (B,L,kvl)
+        krope_all = krope_cached.astype(jnp.float32)                 # (B,L,rp)
         q_eff = jnp.einsum("bqhd,khd->bqhk", q_nope.astype(jnp.float32), w_uk)
         scale = (nope + rp) ** -0.5
         scores = (

@@ -1,0 +1,166 @@
+"""Paged KV cache primitives: a physical page pool + per-slot block tables.
+
+Layout (per attention/MLA block, stacked over layer reps by the stage init):
+
+  * pool leaves — ``k``/``v``: ``(n_pages, page_size, kv, hd)``,
+    ``slot_pos``: ``(n_pages, page_size)`` (GQA), or ``ckv``/``krope``:
+    ``(n_pages, page_size, ·)`` (MLA). One physical pool is shared by every
+    slot; ``n_pages`` *includes* the reserved null page 0.
+  * ``tab``: ``(batch, max_len // page_size)`` int32 block table — entry
+    ``p`` of slot ``b``'s row is the physical page holding that slot's
+    logical positions ``[p*page_size, (p+1)*page_size)``; 0 = unmapped.
+  * ``idx``: ``(batch,)`` per-slot write position, identical to the dense
+    cache's — rollback stays idx-only (``models.rollback_cache`` unchanged).
+
+Null-page discipline: physical page 0 is never allocated. On the READ side
+an unmapped table entry gathers page 0, whose ``slot_pos`` is all ``-1``
+(GQA position mask) and whose stale MLA content sits at logical positions
+beyond every live query (index-as-position + contiguous writes). On the
+WRITE side an unmapped or out-of-range target is remapped to ``n_pages``
+(one past the pool) so the scatter's ``mode="drop"`` discards it — writing
+through a null entry would corrupt the shared page 0.
+
+Stale-entry safety mirrors the dense rollback argument, with one paging
+addition: a recycled page keeps its previous owner's content, so the host
+pager scrubs ``slot_pos = -1`` on every fresh GQA allocation
+(``scrub_pages``). MLA needs no scrub — index-as-position plus
+write-from-page-start contiguity keeps stale latents at logical positions
+above every live query until overwritten.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: per-page cache leaves (everything except tab/idx and cross-attn xk/xv)
+POOL_KEYS = ("k", "v", "slot_pos", "ckv", "krope")
+
+
+def page_phys(tab, slots, page_size: int, n_pages: int, *, for_write: bool):
+    """Map logical per-slot cache indices ``slots`` (B, S) to physical
+    ``(page, offset)`` pairs under block table ``tab`` (B, cap).
+
+    for_write=True sends unmapped / out-of-range targets to ``n_pages`` so a
+    ``mode="drop"`` scatter discards them; for_write=False sends them to the
+    null page 0 (read-safe: invalidated slot_pos / beyond-query positions)."""
+    cap = tab.shape[1]
+    page_l = jnp.floor_divide(slots, page_size)
+    off = jnp.mod(slots, page_size)
+    in_bounds = (slots >= 0) & (page_l < cap)
+    pg = jnp.take_along_axis(tab, jnp.clip(page_l, 0, cap - 1), axis=1)
+    if for_write:
+        pg = jnp.where(in_bounds & (pg > 0), pg, n_pages)
+    else:
+        pg = jnp.where(in_bounds & (pg > 0), pg, 0)
+    return pg, off
+
+
+def page_scatter(pool, tab, slots, values):
+    """Scatter ``values`` (B, S, ...) into the pool (n_pages, ps, ...) at the
+    physical locations of logical indices ``slots`` (B, S) under ``tab``.
+    Unmapped / out-of-range targets are dropped (see module docstring)."""
+    pg, off = page_phys(
+        tab, slots, pool.shape[1], pool.shape[0], for_write=True
+    )
+    return pool.at[pg, off].set(values.astype(pool.dtype), mode="drop")
+
+
+def page_view(pool, tab):
+    """Gather the per-slot logical view (B, cap*ps, ...) from the pool —
+    the paged read path: downstream position-masked attention (sdpa, the
+    absorbed MLA einsums, tree gates) runs on this view unchanged."""
+    g = pool[tab]                                     # (B, cap, ps, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def set_block_tables(cache, tab):
+    """Broadcast a fresh (batch, cap) int32 block table into every ``tab``
+    leaf of a paged cache pytree (the host pager's flush point)."""
+    tab = jnp.asarray(tab, jnp.int32)
+
+    def fix(path, leaf):
+        if getattr(path[-1], "key", None) == "tab":
+            return jnp.broadcast_to(tab, leaf.shape)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def scrub_pages(cache, pages):
+    """Invalidate ``slot_pos`` on freshly allocated physical pages
+    (``pages``: (K,) int32, padded with >= n_pages sentinels — dropped).
+
+    This is the paging leg of the stale-entry safety argument: a recycled
+    page still holds its previous owner's recorded positions, which could
+    otherwise unmask garbage K/V for a new owner whose queries pass them.
+    MLA pools carry no slot_pos and need no scrub (index-as-position)."""
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def fix(path, leaf):
+        if getattr(path[-1], "key", None) == "slot_pos" and leaf.ndim == 3:
+            # (reps, n_pages, ps) pool leaf — dense slot_pos is 2-D
+            return leaf.at[:, pages].set(-1, mode="drop")
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def compact_paged_block(bd, src, dst, live):
+    """Tree-verify window compaction for one paged block dict (stacked over
+    reps): gather the accepted path's entries from their node slots and
+    scatter them onto contiguous slots, both through the block table.
+
+    src/dst: (B, N) logical indices (models.compact_tree_cache computes
+    them); live: (B, N) bool — slots >= take get slot_pos = -1. Unmapped
+    sources read the null page (slot_pos -1, never attended); unmapped
+    destinations are dropped."""
+    tab = bd["tab"][0]                     # (B, cap) — identical across reps
+    out = dict(bd)
+    for key in POOL_KEYS:
+        if key not in bd:
+            continue
+        leaf = bd[key]                     # (reps, n_pages, ps, ...)
+        n_pages, ps = leaf.shape[1], leaf.shape[2]
+        pg_s, off_s = page_phys(tab, src, ps, n_pages, for_write=False)
+        pg_d, off_d = page_phys(tab, dst, ps, n_pages, for_write=True)
+        gathered = leaf[:, pg_s, off_s]    # (reps, B, N, ...)
+        if key == "slot_pos":
+            gathered = jnp.where(live[None], gathered, -1).astype(leaf.dtype)
+        out[key] = leaf.at[:, pg_d, off_d].set(gathered, mode="drop")
+    return out
+
+
+def gather_page(cache, page: int):
+    """Copy one physical page's content (every pool leaf, every layer) to
+    host numpy — the offload tier's page-out. Returns a nested
+    [stage][block][leaf] structure mirroring the cache."""
+    out = []
+    for stage in cache:
+        so = {}
+        for bname, bd in stage.items():
+            if "tab" in bd:
+                so[bname] = {k: bd[k][:, page] for k in POOL_KEYS if k in bd}
+        out.append(so)
+    return jax.device_get(out)
+
+
+def restore_page(cache, page: int, data):
+    """Write a previously gathered page back into physical page ``page`` —
+    the offload tier's page-in (the pager re-points the radix node here)."""
+    new = []
+    for stage, sdata in zip(cache, data):
+        so = {}
+        for bname, bd in stage.items():
+            if bname in sdata:
+                nd = dict(bd)
+                for k, arr in sdata[bname].items():
+                    # page is a host int the pager allocated < n_pages
+                    nd[k] = nd[k].at[:, page].set(
+                        jnp.asarray(arr).astype(nd[k].dtype),
+                        mode="promise_in_bounds",
+                    )
+                so[bname] = nd
+            else:
+                so[bname] = bd
+        new.append(so)
+    return new

@@ -105,6 +105,29 @@ class Obs:
             "repro:time_per_output_token_seconds",
             "mean inter-token latency per finished request",
             buckets=TPOT_BUCKETS)
+        # paged-KV pool + radix prefix sharing (flat zero on unpaged engines)
+        self.g_pages_free = r.gauge(
+            "repro:kv_pages_free", "allocatable KV pages currently free")
+        self.g_pages_total = r.gauge(
+            "repro:kv_pages_total", "allocatable KV pages (null page excluded)")
+        self.g_pages_shared = r.gauge(
+            "repro:kv_pages_shared",
+            "device-resident pages held by the radix prefix index")
+        self.g_pages_offloaded = r.gauge(
+            "repro:kv_pages_offloaded", "prefix pages parked in host RAM")
+        self.c_prefix_hit_tok = r.counter(
+            "repro:prefix_hit_tokens_total",
+            "prompt tokens admitted straight off shared prefix pages")
+        self.c_prefix_hit_req = r.counter(
+            "repro:prefix_hit_requests_total",
+            "admissions that matched at least one shared prefix page")
+        self.c_pages_out = r.counter(
+            "repro:kv_pages_paged_out_total", "cold pages moved to host RAM")
+        self.c_pages_in = r.counter(
+            "repro:kv_pages_paged_in_total", "host pages restored on a hit")
+        self.c_pages_dropped = r.counter(
+            "repro:kv_pages_dropped_total",
+            "cold prefix pages evicted outright (offload tier full/off)")
         # per-tick batch composition: the M the mpGeMM kernels actually saw
         self.s_eff_m = r.series(
             "repro:tick_effective_m",
@@ -166,6 +189,17 @@ class Obs:
         self.c_gen_tok.sync_to(engine.decode_tokens)
         self.c_drafted.sync_to(engine.drafted_tokens)
         self.c_accepted.sync_to(engine.accepted_tokens)
+        pager = getattr(engine, "pager", None)
+        if pager is not None:
+            self.g_pages_free.set(pager.free_pages)
+            self.g_pages_total.set(pager.total_pages)
+            self.g_pages_shared.set(pager.shared_pages)
+            self.g_pages_offloaded.set(pager.offloaded_pages)
+            self.c_prefix_hit_tok.sync_to(pager.prefix_hit_tokens)
+            self.c_prefix_hit_req.sync_to(pager.prefix_hit_requests)
+            self.c_pages_out.sync_to(pager.pages_paged_out)
+            self.c_pages_in.sync_to(pager.pages_paged_in)
+            self.c_pages_dropped.sync_to(pager.pages_dropped)
 
     # -- kernel hooks (ops.py / autotune.py via install()/current()) -----
     def mpgemm_span(self, m_tokens: int, k: int, n_out: int, impl: str,
@@ -232,6 +266,13 @@ class Obs:
         if self.c_drafted.value:
             acc = self.c_accepted.value / self.c_drafted.value
             parts.append(f"accept={acc:.2f}")
+        if self.g_pages_total.value:
+            parts.append(
+                f"pages={int(self.g_pages_free.value)}/"
+                f"{int(self.g_pages_total.value)}"
+            )
+            if self.c_prefix_hit_tok.value:
+                parts.append(f"prefix_hit={int(self.c_prefix_hit_tok.value)}")
         if self.c_rejected.value:
             parts.append(f"rejected={int(self.c_rejected.value)}")
         return " ".join(parts)

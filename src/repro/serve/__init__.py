@@ -1,10 +1,14 @@
 """repro.serve — slot-based continuous-batching serving engine (optionally
-speculative: `Engine(spec=repro.spec.SpecConfig(...))`)."""
+speculative: `Engine(spec=repro.spec.SpecConfig(...))`, optionally paged:
+`Engine(paged_kv=PagedKVConfig(...))` for block-table KV with radix prefix
+sharing and a host-RAM offload tier)."""
 from .engine import Engine, Request
+from .paging import OutOfPages, PagedKVConfig, Pager
 from .sampling import accept_speculative, accept_tree, greedy_accept, sample
 from .scheduler import ContinuousBatchingScheduler, ServeStats
 
 __all__ = [
     "Engine", "Request", "sample", "greedy_accept", "accept_speculative",
     "accept_tree", "ContinuousBatchingScheduler", "ServeStats",
+    "PagedKVConfig", "Pager", "OutOfPages",
 ]

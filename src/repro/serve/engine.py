@@ -86,10 +86,13 @@ from repro import obs as obs_mod
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
 from repro.models import compact_tree_cache, decode_step as model_decode
-from repro.models import init_cache, prefill as model_prefill
-from repro.models import prefill_into_slot, reset_slot_idx, rollback_cache
+from repro.models import gather_page, init_cache, prefill as model_prefill
+from repro.models import prefill_bucket, prefill_into_slot, reset_slot_idx
+from repro.models import restore_page, rollback_cache, scrub_pages
+from repro.models import set_block_tables
 from repro.models import verify_step as model_verify
 from repro.spec import SpecConfig
+from .paging import OutOfPages, PagedKVConfig, Pager
 from .sampling import accept_speculative, accept_tree, sample
 
 
@@ -175,6 +178,7 @@ class Engine:
         spec: SpecConfig | None = None,
         prefill_chunk: int = 0,
         token_budget: int = 0,
+        paged_kv: PagedKVConfig | None = None,
         obs: "obs_mod.ObsConfig | obs_mod.Obs | None" = None,
     ):
         self.params = params
@@ -201,7 +205,49 @@ class Engine:
         self.max_len = max_len
         self.temperature = temperature
         self.rng = jax.random.PRNGKey(seed)
-        self.cache = init_cache(cfg, max_slots, max_len, enc_len=enc_len)
+        # paged KV: a physical page pool + per-slot block tables replace the
+        # dense (max_slots, max_len) slabs. The host-side Pager owns
+        # allocation, radix prefix sharing, and host-RAM offload
+        # (serve.paging); the device side is pure data movement
+        # (models.paged). Admission reserves the full worst-case page budget
+        # up front, so pool exhaustion surfaces exactly once — at add(),
+        # where the scheduler queues the request for pages.
+        self.pager: Pager | None = None
+        self._set_tab = self._scrub = None
+        if paged_kv is not None:
+            if any(s.mixer == "ssm" for s in cfg.layer_specs()):
+                raise ValueError(
+                    "paged KV needs per-position cache entries a block table "
+                    f"can own; {cfg.name} has ssm layer(s), whose recurrent "
+                    "state is neither rollbackable nor pageable"
+                )
+            if any(s.window for s in cfg.layer_specs()):
+                raise ValueError(
+                    "paged KV is exact only for full-buffer caches; "
+                    f"{cfg.name} has windowed (ring-cache) layers — a ring "
+                    "buffer overwrites itself in place, so its pages can "
+                    "never be remapped or shared"
+                )
+            if enc_len:
+                raise ValueError(
+                    "paged KV does not cover cross-attention caches "
+                    "(enc_len > 0): encoder K/V is per-request dense state, "
+                    "not positionally growing history"
+                )
+            ps = paged_kv.page_size
+            n_pages = paged_kv.n_pages or max_slots * (max_len // ps) + 1
+            self.cache = init_cache(
+                cfg, max_slots, max_len, page_size=ps, n_pages=n_pages
+            )
+            self.pager = Pager(
+                paged_kv, max_slots=max_slots, max_len=max_len,
+                n_pages=n_pages, page_out=self._page_out,
+                page_in=self._page_in,
+            )
+            self._set_tab = jax.jit(set_block_tables, donate_argnums=(0,))
+            self._scrub = jax.jit(scrub_pages, donate_argnums=(0,))
+        else:
+            self.cache = init_cache(cfg, max_slots, max_len, enc_len=enc_len)
         self.slot_free = [True] * max_slots
         self.slot_req: dict[int, Request] = {}
         self.last_token = jnp.zeros((max_slots, 1), jnp.int32)
@@ -231,14 +277,16 @@ class Engine:
                 raise ValueError(
                     "chunked prefill needs rollbackable KV caches (the "
                     "mask-padded chunk tail is rolled back); "
-                    f"{cfg.name} has ssm layer(s)"
+                    f"{cfg.name} has ssm layer(s), whose recurrent state is "
+                    "neither rollbackable nor pageable"
                 )
             if any(s.window for s in cfg.layer_specs()):
                 raise ValueError(
-                    "chunked prefill is exact only for full-buffer KV "
-                    f"caches; {cfg.name} has windowed (ring-cache) layers, "
-                    "whose in-window history the padded-tail rollback would "
-                    "clobber"
+                    "chunked prefill is exact only for full-buffer or paged "
+                    f"KV caches; {cfg.name} has windowed (ring-cache) "
+                    "layers, whose in-window history the padded-tail "
+                    "rollback would clobber (the ring overwrites in place, "
+                    "so it is genuinely non-pageable too)"
                 )
         self.prefill_chunk = prefill_chunk
         self.token_budget = token_budget
@@ -254,7 +302,10 @@ class Engine:
         # logit_cols: each slot only ever needs the distribution after ONE
         # chunk position (its last real token), so the head matmul runs on
         # (B, 1, d) gathered hidden states, never (B, chunk, V) — non-final
-        # chunks skip the full-vocab projection entirely
+        # chunks skip the full-vocab projection entirely. Paged engines need
+        # this entry even in whole-prompt mode: their admission prefill is a
+        # wide in-place verify pass (the B=1 scatter-a-fresh-cache path has
+        # no block tables to write through)
         self._chunk_verify = (
             jax.jit(
                 lambda p, c, t, col: model_verify(
@@ -263,7 +314,7 @@ class Engine:
                 ),
                 donate_argnums=(1,),
             )
-            if prefill_chunk else None
+            if (prefill_chunk or paged_kv is not None) else None
         )
         # speculative decoding (draft → verify → accept)
         self.spec = spec
@@ -274,13 +325,16 @@ class Engine:
             if bad:
                 raise ValueError(
                     "speculative decoding needs rollbackable KV caches; "
-                    f"{cfg.name} has {len(bad)} ssm layer(s)"
+                    f"{cfg.name} has {len(bad)} ssm layer(s), whose "
+                    "recurrent state is neither rollbackable nor pageable"
                 )
             if any(s.window for s in cfg.layer_specs()):
                 raise ValueError(
-                    "speculative decoding is exact only for full-buffer KV "
-                    f"caches; {cfg.name} has windowed (ring-cache) layers, "
-                    "whose in-window history a rollback would clobber"
+                    "speculative decoding is exact only for full-buffer or "
+                    f"paged KV caches; {cfg.name} has windowed (ring-cache) "
+                    "layers, whose in-window history a rollback would "
+                    "clobber (the ring overwrites in place, so it is "
+                    "genuinely non-pageable too)"
                 )
             self.drafter = spec.build(max_slots=max_slots, max_len=max_len, mode=mode)
             # tree mode: the static DraftTree layout is baked into the
@@ -355,9 +409,25 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + "
                 f"max_new_tokens - 1 ({req.max_new_tokens - 1}){extra} = {need} "
-                f"exceeds max_len={self.max_len}; truncate the prompt, lower "
-                f"max_new_tokens, or grow the engine's max_len"
+                f"exceeds the model context (max_len={self.max_len}); "
+                f"truncate the prompt, lower max_new_tokens, or grow the "
+                f"engine's max_len — this can never succeed, unlike a "
+                f"transient out-of-pages deferral"
             )
+        if self.pager is not None:
+            # a reservation larger than the ENTIRE pool is equally permanent:
+            # no amount of waiting (or prefix sharing — shared pages are pool
+            # pages too) can ever map that many pages to one slot
+            ps = self.pager.cfg.page_size
+            need_pages = -(-need // ps)
+            if need_pages > self.pager.total_pages:
+                raise ValueError(
+                    f"request {req.rid}: needs {need_pages} KV pages "
+                    f"({need} positions at page_size={ps}) but the pool "
+                    f"only has {self.pager.total_pages} allocatable pages; "
+                    f"grow n_pages or shrink the request — this can never "
+                    f"succeed, unlike a transient out-of-pages deferral"
+                )
 
     def add(self, req: Request) -> bool:
         """Admit a request into a free slot. False if no slot free; raises
@@ -375,14 +445,38 @@ class Engine:
             return False
         req.slot = slot
         req.t_submit = req.t_submit or time.perf_counter()
+        matched = 0
+        if self.pager is not None:
+            # reserve the request's full worst-case page budget (the same
+            # bound _validate just checked against max_len), reusing shared
+            # prefix pages where the radix index matches. OutOfPages is a
+            # TRANSIENT condition — decoding slots will finish and free
+            # pages — so the request stays queued (return False), in
+            # contrast to the permanent exceeds-model-context ValueError.
+            need = len(req.prompt) + req.max_new_tokens - 1 + self._draft_window
+            try:
+                matched = self.pager.admit(slot, np.asarray(req.prompt), need)
+            except OutOfPages as e:
+                req.error = f"queued: waiting for free KV pages ({e})"
+                return False
+            req.error = ""
+            self._flush_pager()
+            # matched prefix pages already hold their KV: the slot's write
+            # position starts at the matched frontier and only the prompt
+            # suffix runs through the model
+            self.cache = reset_slot_idx(self.cache, slot, value=matched)
         if self.prefill_chunk:
             self.slot_free[slot] = False
-            req.prefill_pos = 0
+            req.prefill_pos = matched
             self.prefilling[slot] = req
-            # the slot's write position restarts at 0; stale K/V needs no
-            # clearing (see models.reset_slot_idx) — contiguous chunk
-            # writes re-cover every position before a query can see it
-            self.cache = reset_slot_idx(self.cache, slot)
+            if self.pager is None:
+                # the slot's write position restarts at 0; stale K/V needs
+                # no clearing (see models.reset_slot_idx) — contiguous
+                # chunk writes re-cover every position before a query sees it
+                self.cache = reset_slot_idx(self.cache, slot)
+            return True
+        if self.pager is not None:
+            self._paged_prefill(slot, req, matched)
             return True
         # SSM/hybrid archs can't mask pads inside the scan → exact lengths.
         has_ssm = any(s.mixer == "ssm" for s in self.cfg.layer_specs())
@@ -400,6 +494,35 @@ class Engine:
         self._start_decoding(slot, req, nxt, time.perf_counter())
         return True
 
+    def _paged_prefill(self, slot: int, req: Request, matched: int) -> None:
+        """Whole-prompt admission for a paged engine: one wide in-place
+        verify pass over the unmatched prompt suffix, writing K/V through
+        the slot's freshly flushed block table. The dense path's B=1
+        scatter-a-fresh-cache trick has no analogue here (a fresh cache has
+        no pages), so paged admission reuses the chunked-prefill machinery
+        with chunk = the whole suffix: other slots' rows are mask-padding
+        whose frontier scribbles are rolled back exactly like a chunk
+        step's. A prefix hit shrinks the pass to the suffix alone — the
+        shared pages' KV is already resident."""
+        rem = req.prompt[matched:]
+        bucket = prefill_bucket(len(rem), self.max_len)
+        tokens = np.zeros((self.max_slots, bucket), np.int32)
+        tokens[slot, :len(rem)] = rem
+        col = np.zeros(self.max_slots, np.int64)
+        col[slot] = len(rem) - 1
+        new_idx = self._idx_vector()
+        new_idx[slot] = len(req.prompt)
+        with kernel_ops.dispatch_override(**self._mpgemm):
+            rows, cache = self._chunk_verify(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(col, np.int32),
+            )                                                    # rows: (B, V)
+        self.cache = rollback_cache(cache, jnp.asarray(new_idx))
+        self.prefill_tokens += len(rem)
+        self.prefill_pad_tokens += bucket - len(rem)
+        nxt = int(self._sample(rows[slot][None])[0])
+        self._start_decoding(slot, req, nxt, time.perf_counter())
+
     def _start_decoding(self, slot: int, req: Request, first_tok: int,
                         now: float) -> None:
         """Prefill complete (whole-prompt or final chunk): record the first
@@ -415,6 +538,8 @@ class Engine:
             req.done = True
             req.t_done = req.t_first_token
             self.slot_free[slot] = True
+            if self.pager is not None:
+                self.pager.release(slot, np.asarray(req.prompt))
             return
         self.slot_free[slot] = False
         self.slot_req[slot] = req
@@ -431,6 +556,37 @@ class Engine:
     def _sample(self, logits):
         self.rng, k = jax.random.split(self.rng)
         return sample(logits, k, temperature=self.temperature)
+
+    # -- paged-KV device sync ------------------------------------------
+    def _page_out(self, page: int):
+        """Pager offload callback: copy one physical page to host numpy."""
+        return gather_page(self.cache, page)
+
+    def _page_in(self, page: int, data) -> None:
+        """Pager page-in callback: restore a host copy into `page`. The
+        restored slot_pos rides along with the K/V, so paged-in pages are
+        deliberately NOT scrubbed (a scrub would erase the positions that
+        make the restored prefix attendable)."""
+        self.cache = restore_page(self.cache, page, data)
+
+    def _flush_pager(self) -> None:
+        """Push the pager's host state to the device before the next jitted
+        step: scrub slot_pos = -1 on freshly allocated pages (fixed-width
+        batches padded with the out-of-range n_pages sentinel, so the jitted
+        scrub never recompiles and pads are mode="drop"ped) and broadcast
+        the new block tables into every layer's tab. Called at admission
+        (before the prefill pass) and at tick start (after releases)."""
+        if self.pager is None or not self.pager.dirty:
+            return
+        tab, fresh = self.pager.take_flush()
+        if fresh:
+            w = self.pager.cfg.scrub_batch
+            fresh = fresh + [self.pager.n_pages] * ((-len(fresh)) % w)
+            for i in range(0, len(fresh), w):
+                self.cache = self._scrub(
+                    self.cache, jnp.asarray(fresh[i:i + w], jnp.int32)
+                )
+        self.cache = self._set_tab(self.cache, jnp.asarray(tab, jnp.int32))
 
     def _slot_exhausted(self, req: Request) -> bool:
         """True when the slot has no room for another decode (or verify)
@@ -455,6 +611,12 @@ class Engine:
         self.active[slot] = False
         self.slot_free[slot] = True
         del self.slot_req[slot]
+        if self.pager is not None:
+            # prefix pages return to the radix index (the next request with
+            # this prompt prefix admits at near-zero prefill cost), the rest
+            # to the free pool; the block-table flush is deferred to the
+            # next admission or tick (no jitted step runs before either)
+            self.pager.release(slot, np.asarray(req.prompt))
         if self.drafter is not None:
             self.drafter.on_release(slot)
 
@@ -487,6 +649,7 @@ class Engine:
         PREFILLING), then/or the batched decode step. The scheduler's tick
         entry point; whole-prompt engines fall straight through to
         decode_once()."""
+        self._flush_pager()    # released slots' tab rows → null before any step
         if self.prefilling:
             self._chunk_step()
             if not self._decode_rides:
@@ -585,6 +748,7 @@ class Engine:
     def decode_once(self):
         """One batched decode step over every active slot. With spec enabled
         this is draft → verify → accept (1..k+1 tokens per slot)."""
+        self._flush_pager()    # bench loops call decode_once without step()
         if not self.active.any():
             return
         if self._tree is not None:
@@ -823,6 +987,9 @@ class Engine:
         entries = {"prefill1": self._prefill1, "decode": self._decode}
         if self._chunk_verify is not None:
             entries["chunk_verify"] = self._chunk_verify
+        if self.pager is not None:
+            entries["set_tab"] = self._set_tab
+            entries["scrub"] = self._scrub
         if self.spec is not None:
             entries["verify"] = self._verify
         if self._tree is not None:
@@ -842,6 +1009,19 @@ class Engine:
         self.decode_steps = self.chunk_steps = 0
         self.spec_steps = self.spec_slot_steps = self.spec_skipped_steps = 0
         self.drafted_tokens = self.accepted_tokens = self.verified_nodes = 0
+        if self.pager is not None:
+            self.pager.prefix_hit_tokens = self.pager.prefix_hit_requests = 0
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        """Prompt tokens admitted straight off shared radix-prefix pages
+        (their prefill was skipped entirely). 0 on unpaged engines."""
+        return self.pager.prefix_hit_tokens if self.pager is not None else 0
+
+    @property
+    def prefix_hit_requests(self) -> int:
+        """Admissions that matched at least one shared prefix page."""
+        return self.pager.prefix_hit_requests if self.pager is not None else 0
 
     @property
     def n_active(self) -> int:

@@ -356,8 +356,13 @@ ENGINE_NAMES = {
     "engine/prefill1", "engine/decode", "engine/chunk_verify",
     "engine/verify", "engine/drafter.prefill", "engine/drafter.verify",
     "engine/drafter.decode", "engine/tree_verify", "engine/compact",
+    "engine/paged_decode", "engine/paged_chunk_verify",
+    "engine/set_tab", "engine/scrub", "engine/paged_compact",
 }
-FULL_ONLY_NAMES = {"engine/mla_decode", "engine/mla_chunk_verify"}
+FULL_ONLY_NAMES = {
+    "engine/mla_decode", "engine/mla_chunk_verify",
+    "engine/paged_mla_decode", "engine/paged_mla_chunk_verify",
+}
 IMPLS = (
     "vlut", "vlut_packed_fused", "vlut_packed_unfused",
     "scalar_lut", "mad_dense", "mad_int8",

@@ -1,0 +1,498 @@
+"""Paged KV cache: block tables, radix prefix sharing, host-RAM offload.
+
+The exactness contract: a paged engine's greedy serving output is token-
+identical to the dense slot-cache engine — across GQA and MLA archs, the
+whole-prompt / chunked-prefill admission paths, and speculation in chain,
+adaptive-K, and tree modes — including the block-boundary edges (prompt
+exactly on a page edge, rollback across a page edge, copy-on-write forks
+mid-page) and through page recycling, prefix sharing, and the offload tier.
+
+Admission semantics (the out-of-pages satellite): pool exhaustion is a
+TRANSIENT deferral — `Engine.add` returns False with a queue-for-pages
+error string and the scheduler keeps the request queued — while a request
+that can never fit raises the permanent exceeds-model-context ValueError.
+The two must stay distinguishable.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_lm, pack_params
+from repro.serve import (
+    ContinuousBatchingScheduler,
+    Engine,
+    OutOfPages,
+    PagedKVConfig,
+    Request,
+)
+from repro.serve.paging import PagePool, Pager, RadixPrefixIndex
+from repro.spec import SpecConfig
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-360m", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def served_mla():
+    cfg = get_config("deepseek-v3-671b", smoke=True)
+    params = pack_params(init_lm(jax.random.PRNGKey(0), cfg), cfg)
+    return cfg, params
+
+
+def _run(cfg, params, prompts, *, max_new=6, slots=3, max_len=96, **kw):
+    eng = Engine(params, cfg, max_slots=slots, max_len=max_len, **kw)
+    sched = ContinuousBatchingScheduler(eng)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    sched.submit(reqs)
+    stats = sched.run_to_completion()
+    return [r.generated for r in reqs], stats, eng
+
+
+def _prompts(cfg, rng, lens):
+    return [rng.integers(0, cfg.vocab, size=n).astype(np.int32) for n in lens]
+
+
+# --------------------------------------------------------------------------
+# Host-side pager unit tests (no device, no model → fast lane)
+# --------------------------------------------------------------------------
+class TestPagePool:
+    def test_null_page_never_allocated(self):
+        pool = PagePool(4)
+        got = {pool.alloc() for _ in range(3)}
+        assert got == {1, 2, 3}
+        assert pool.alloc() is None
+
+    def test_refcounted_release(self):
+        pool = PagePool(3)
+        p = pool.alloc()
+        pool.retain(p)
+        assert not pool.release(p)      # one ref left → not freed
+        assert pool.release(p)          # last ref → back on the free list
+        assert pool.free_pages == 2
+
+
+class TestPagerAdmission:
+    def _pager(self, n_pages=9, ps=4, **kw):
+        cfg = PagedKVConfig(page_size=ps, n_pages=n_pages, **kw)
+        return Pager(cfg, max_slots=2, max_len=32, n_pages=n_pages)
+
+    def test_reserves_full_budget(self):
+        pager = self._pager()
+        pager.admit(0, np.arange(6), need_tokens=10)   # ceil(10/4) = 3 pages
+        assert pager.free_pages == 8 - 3
+        assert len(pager.slot_pages[0]) == 3
+
+    def test_out_of_pages_rolls_back(self):
+        pager = self._pager(n_pages=3)                 # 2 allocatable
+        with pytest.raises(OutOfPages, match="page pool exhausted"):
+            pager.admit(0, np.arange(8), need_tokens=12)  # needs 3
+        assert pager.free_pages == 2                   # nothing leaked
+        assert pager.slot_pages[0] == []
+
+    def test_release_feeds_prefix_index_and_rehit(self):
+        pager = self._pager()
+        prompt = np.arange(11)                         # 2 full pages + 3
+        pager.admit(0, prompt, need_tokens=14)         # 4 pages
+        pager.release(0, prompt)
+        # 2 full-page prefix chunks live in the index; the rest freed
+        assert pager.shared_pages == 2
+        assert pager.free_pages == 8 - 2
+        matched = pager.admit(1, prompt, need_tokens=14)
+        assert matched == 8                            # 2 pages x ps=4
+        assert pager.prefix_hit_tokens == 8
+        assert pager.prefix_hit_requests == 1
+        assert pager.slot_shared[1] == 2
+
+    def test_match_capped_below_full_prompt(self):
+        """At least one prompt token must run through the model (first-token
+        logits), so a fully indexed prompt still leaves a fresh page."""
+        pager = self._pager()
+        prompt = np.arange(8)                          # exactly 2 pages
+        pager.admit(0, prompt, need_tokens=8)
+        pager.release(0, prompt)
+        matched = pager.admit(1, prompt, need_tokens=8)
+        assert matched == 4                            # page 2 NOT matched
+        assert len(pager.slot_pages[1]) == 2           # 1 shared + 1 fresh
+
+    def test_prefix_sharing_off(self):
+        pager = self._pager(prefix_sharing=False)
+        prompt = np.arange(11)
+        pager.admit(0, prompt, need_tokens=12)
+        pager.release(0, prompt)
+        assert pager.shared_pages == 0
+        assert pager.free_pages == 8
+        assert pager.admit(1, prompt, need_tokens=12) == 0
+
+    def test_cow_fork_shares_only_full_common_pages(self):
+        pager = self._pager()
+        p1 = np.arange(12)
+        p2 = np.concatenate([np.arange(6), 90 + np.arange(6)])  # forks mid-page 1
+        pager.admit(0, p1, need_tokens=12)
+        pager.release(0, p1)
+        matched = pager.admit(1, p2, need_tokens=12)
+        assert matched == 4                            # only page 0 shared
+        # shared page is refcounted, not copied: index ref + slot ref
+        shared = pager.slot_pages[1][0]
+        assert pager.pool.refs[shared] == 2
+
+    def test_eviction_drops_cold_leaves_first(self):
+        pager = self._pager(n_pages=5)                 # 4 allocatable
+        prompt = np.arange(11)
+        pager.admit(0, prompt, need_tokens=14)         # all 4 pages
+        pager.release(0, prompt)                       # 2 → index, 2 freed
+        # a disjoint request needs 4 pages → both index pages get dropped
+        pager.admit(1, 50 + np.arange(8), need_tokens=14)
+        assert pager.pages_dropped == 2
+        assert pager.shared_pages == 0
+
+    def test_offload_tier_pages_out_and_back_in(self):
+        store = {}
+        calls = {"out": 0, "in": 0}
+
+        def page_out(page):
+            calls["out"] += 1
+            return f"kv@{page}"
+
+        def page_in(page, data):
+            calls["in"] += 1
+            store[page] = data
+
+        cfg = PagedKVConfig(page_size=4, n_pages=5, host_offload_pages=8)
+        pager = Pager(cfg, max_slots=2, max_len=32, n_pages=5,
+                      page_out=page_out, page_in=page_in)
+        prompt = np.arange(11)
+        pager.admit(0, prompt, need_tokens=14)
+        pager.release(0, prompt)
+        pager.admit(1, 50 + np.arange(8), need_tokens=14)  # evicts → host
+        assert calls["out"] == 2 and pager.offloaded_pages == 2
+        assert pager.pages_paged_out == 2
+        pager.release(1, 50 + np.arange(8))
+        # the original prefix pages come back from the host tier on a hit —
+        # and paging them in squeezes the *other* prompt's cold prefix out
+        # (the pool still only holds 4 pages), so the tier keeps 2 resident
+        matched = pager.admit(0, prompt, need_tokens=14)
+        assert matched == 8 and calls["in"] == 2
+        assert pager.pages_paged_in == 2 and pager.offloaded_pages == 2
+        assert pager.pages_paged_out == 4
+
+    def test_radix_walk_stops_at_first_miss(self):
+        idx = RadixPrefixIndex(4)
+        n1 = idx.insert(idx.root, (0, 1, 2, 3))
+        n1.page = 1
+        n2 = idx.insert(n1, (4, 5, 6, 7))
+        n2.page = 2
+        hits = list(idx.walk(np.array([0, 1, 2, 3, 9, 9, 9, 9]), 8))
+        assert [n.page for n in hits] == [1]
+        hits = list(idx.walk(np.arange(8), 8))
+        assert [n.page for n in hits] == [1, 2]
+        assert list(idx.walk(np.arange(8), 7)) == [n1]  # partial page cut
+
+
+# --------------------------------------------------------------------------
+# Engine admission semantics (chunked claims → no forward pass → fast lane)
+# --------------------------------------------------------------------------
+class TestPagedEngineAdmission:
+    def test_out_of_pages_defers_exceeds_context_rejects(self):
+        """The two admission failures must stay distinguishable: transient
+        pool exhaustion queues (False + queue-for-pages error), a request
+        that can never fit raises (exceeds-model-context ValueError)."""
+        cfg = get_config("smollm-360m", smoke=True)
+        eng = Engine(None, cfg, max_slots=2, max_len=64, prefill_chunk=16,
+                     paged_kv=PagedKVConfig(page_size=16, n_pages=3,
+                                            prefix_sharing=False))
+        ok = Request(rid=0, prompt=np.arange(20, dtype=np.int32),
+                     max_new_tokens=8)
+        assert eng.add(ok) and ok.error == ""
+        starved = Request(rid=1, prompt=np.arange(20, dtype=np.int32),
+                          max_new_tokens=8)
+        assert not eng.add(starved)
+        assert "waiting for free KV pages" in starved.error
+        assert "exhausted" in starved.error
+        too_big = Request(rid=2, prompt=np.arange(60, dtype=np.int32),
+                          max_new_tokens=8)
+        with pytest.raises(ValueError, match="model context"):
+            eng.add(too_big)
+        # fits max_len (47 ≤ 64) but needs 3 pages against a 2-page pool:
+        # permanent too — waiting can never produce pages the pool lacks
+        pool_big = Request(rid=3, prompt=np.arange(40, dtype=np.int32),
+                           max_new_tokens=8)
+        with pytest.raises(ValueError, match="allocatable pages"):
+            eng.add(pool_big)
+
+    def test_queue_for_pages_clears_error_on_retry(self):
+        cfg = get_config("smollm-360m", smoke=True)
+        eng = Engine(None, cfg, max_slots=2, max_len=64, prefill_chunk=16,
+                     paged_kv=PagedKVConfig(page_size=16, n_pages=4,
+                                            prefix_sharing=False))
+        a = Request(rid=0, prompt=np.arange(20, dtype=np.int32),
+                    max_new_tokens=8)
+        b = Request(rid=1, prompt=np.arange(20, dtype=np.int32),
+                    max_new_tokens=8)
+        assert eng.add(a) and not eng.add(b)
+        assert "waiting for free KV pages" in b.error
+        # slot release frees the reservation; the retry must admit cleanly
+        del eng.prefilling[a.slot]
+        eng.slot_free[a.slot] = True
+        eng.pager.release(a.slot, a.prompt)
+        assert eng.add(b) and b.error == ""
+
+    def test_reservation_prevents_mid_decode_exhaustion(self):
+        """Admission reserves prompt + max_new - 1 (+ draft window) worth of
+        pages up front — after admit, the slot can decode to its token
+        budget without ever touching the allocator again."""
+        cfg = get_config("smollm-360m", smoke=True)
+        eng = Engine(None, cfg, max_slots=1, max_len=64, prefill_chunk=16,
+                     paged_kv=PagedKVConfig(page_size=16,
+                                            prefix_sharing=False))
+        req = Request(rid=0, prompt=np.arange(17, dtype=np.int32),
+                      max_new_tokens=16)
+        assert eng.add(req)
+        # 17 + 16 - 1 = 32 positions → 2 pages of 16
+        assert len(eng.pager.slot_pages[0]) == 2
+
+    def test_rejects_non_pageable_archs(self):
+        """Ring-buffer (windowed) and SSM layers are genuinely non-pageable;
+        the refusal must say so (not just name the dense fallback)."""
+        paged = PagedKVConfig(page_size=16)
+        with pytest.raises(ValueError, match="window"):
+            Engine(None, get_config("gemma3-1b", smoke=True),
+                   max_slots=1, max_len=64, paged_kv=paged)
+        with pytest.raises(ValueError, match="ssm"):
+            Engine(None, get_config("mamba2-1.3b", smoke=True),
+                   max_slots=1, max_len=64, paged_kv=paged)
+
+    def test_knob_validation(self):
+        cfg = get_config("smollm-360m", smoke=True)
+        with pytest.raises(ValueError, match="multiple of page_size"):
+            Engine(None, cfg, max_len=60,
+                   paged_kv=PagedKVConfig(page_size=16))
+        with pytest.raises(ValueError, match="n_pages"):
+            Engine(None, cfg, max_len=64,
+                   paged_kv=PagedKVConfig(page_size=16, n_pages=1))
+
+
+# --------------------------------------------------------------------------
+# Greedy token identity: paged == dense
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+class TestPagedExactness:
+    LENS = (7, 19, 34, 4, 25)
+    PAGED = PagedKVConfig(page_size=8)
+
+    def test_gqa_whole_prompt(self, served, rng):
+        cfg, params = served
+        prompts = _prompts(cfg, rng, self.LENS)
+        base, bstats, _ = _run(cfg, params, prompts)
+        got, pstats, _ = _run(cfg, params, prompts, paged_kv=self.PAGED)
+        assert got == base
+        assert pstats.prefill_tokens == bstats.prefill_tokens
+
+    def test_gqa_chunked(self, served, rng):
+        cfg, params = served
+        prompts = _prompts(cfg, rng, self.LENS)
+        base, _, _ = _run(cfg, params, prompts)
+        got, stats, _ = _run(cfg, params, prompts, prefill_chunk=16,
+                             paged_kv=self.PAGED)
+        assert got == base and stats.chunk_steps > 0
+
+    def test_mla_whole_prompt(self, served_mla, rng):
+        cfg, params = served_mla
+        prompts = _prompts(cfg, rng, self.LENS)
+        base, _, _ = _run(cfg, params, prompts)
+        got, _, _ = _run(cfg, params, prompts, paged_kv=self.PAGED)
+        assert got == base
+
+    def test_mla_chunked(self, served_mla, rng):
+        cfg, params = served_mla
+        prompts = _prompts(cfg, rng, (7, 19, 34))
+        base, _, _ = _run(cfg, params, prompts)
+        got, _, _ = _run(cfg, params, prompts, prefill_chunk=16,
+                         paged_kv=self.PAGED)
+        assert got == base
+
+    @pytest.mark.parametrize("spec", [
+        SpecConfig(k=3, drafter="ngram"),
+        SpecConfig(k=3, drafter="ngram", adaptive_k=True),
+        SpecConfig(k=3, drafter="ngram", tree=(2, 2)),
+    ], ids=["chain", "adaptive", "tree"])
+    def test_gqa_spec_modes(self, served, rng, spec):
+        cfg, params = served
+        prompts = _prompts(cfg, rng, self.LENS)
+        base, _, _ = _run(cfg, params, prompts, spec=spec)
+        got, stats, _ = _run(cfg, params, prompts, spec=spec,
+                             paged_kv=self.PAGED)
+        assert got == base and stats.spec_steps > 0
+
+    @pytest.mark.parametrize("spec", [
+        SpecConfig(k=3, drafter="ngram"),
+        SpecConfig(k=2, drafter="ngram", tree=(2, 2)),
+    ], ids=["chain", "tree"])
+    def test_mla_spec_modes(self, served_mla, rng, spec):
+        cfg, params = served_mla
+        prompts = _prompts(cfg, rng, (7, 19, 34))
+        base, _, _ = _run(cfg, params, prompts, spec=spec)
+        got, _, _ = _run(cfg, params, prompts, spec=spec,
+                         paged_kv=self.PAGED)
+        assert got == base
+
+    def test_page_recycling_stays_exact(self, served, rng):
+        """slots=1 with a minimal pool: every admission reuses the previous
+        request's recycled (garbage-holding) pages, so the scrub-on-alloc
+        discipline is what keeps outputs exact."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (19, 25, 7, 34))
+        base, _, _ = _run(cfg, params, prompts, slots=1)
+        paged = PagedKVConfig(page_size=8, n_pages=96 // 8 + 1,
+                              prefix_sharing=False)
+        got, _, eng = _run(cfg, params, prompts, slots=1, paged_kv=paged)
+        assert got == base
+        assert eng.pager.free_pages == eng.pager.total_pages  # all returned
+
+
+# --------------------------------------------------------------------------
+# Block-boundary edges
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+class TestBlockBoundaries:
+    def test_prompt_exactly_on_page_edge(self, served, rng):
+        """Prompts of exactly 1, 2, 3 pages: the write frontier lands on a
+        page boundary, so the first decode allocates nothing mid-page."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (8, 16, 24))
+        base, _, _ = _run(cfg, params, prompts)
+        got, _, _ = _run(cfg, params, prompts,
+                         paged_kv=PagedKVConfig(page_size=8))
+        assert got == base
+
+    def test_rollback_across_page_edge(self, served, rng):
+        """Speculative rollback must restore a frontier that crosses page
+        boundaries: page_size=4 < k+1=5 guarantees every verify window spans
+        at least one page edge."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (7, 14, 21))
+        spec = SpecConfig(k=4, drafter="ngram")
+        base, _, _ = _run(cfg, params, prompts, spec=spec, max_new=10)
+        got, _, _ = _run(cfg, params, prompts, spec=spec, max_new=10,
+                         paged_kv=PagedKVConfig(page_size=4))
+        assert got == base
+
+    def test_tree_compaction_across_page_edge(self, served, rng):
+        """Tree verify writes n_nodes candidate slots, compaction gathers the
+        winners — with page_size=4 < n_nodes=7 the window always straddles a
+        page edge, exercising the block-table gather/scatter compaction."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (7, 14, 21))
+        spec = SpecConfig(k=2, drafter="ngram", tree=(3, 2))
+        base, _, _ = _run(cfg, params, prompts, spec=spec, max_new=10)
+        got, _, _ = _run(cfg, params, prompts, spec=spec, max_new=10,
+                         paged_kv=PagedKVConfig(page_size=4))
+        assert got == base
+
+    def test_cow_fork_mid_page(self, served, rng):
+        """Two prompts sharing a prefix that ends mid-page: only the full
+        common pages are shared, the partial page is recomputed privately —
+        and both outputs match the dense engine's."""
+        cfg, params = served
+        base_p = rng.integers(0, cfg.vocab, size=20).astype(np.int32)
+        fork = base_p.copy()
+        fork[12:] = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+        prompts = [base_p, fork, base_p]
+        dense, _, _ = _run(cfg, params, prompts, slots=1)
+        got, stats, _ = _run(cfg, params, prompts, slots=1,
+                             paged_kv=PagedKVConfig(page_size=8))
+        assert got == dense
+        # req1 shares only page 0 (8 tok), req2 rehits base_p's full prefix
+        assert stats.prefix_hit_requests == 2
+        assert stats.prefix_hit_tokens == 8 + 16
+
+
+# --------------------------------------------------------------------------
+# Prefix sharing + offload end-to-end
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+class TestPrefixSharingServing:
+    def test_shared_system_prompt_identity_and_hits(self, served, rng):
+        cfg, params = served
+        shared = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+        prompts = [
+            np.concatenate([shared,
+                            rng.integers(0, cfg.vocab, size=4).astype(np.int32)])
+            for _ in range(4)
+        ]
+        dense, _, _ = _run(cfg, params, prompts, slots=1)
+        got, stats, eng = _run(cfg, params, prompts, slots=1,
+                               paged_kv=PagedKVConfig(page_size=8))
+        assert got == dense
+        # requests 2..4 each reuse the 24-token (3-page) shared prefix
+        assert stats.prefix_hit_requests == 3
+        assert stats.prefix_hit_tokens == 3 * 24
+        # shared prefill work was actually skipped, not just recounted
+        assert stats.prefill_tokens == sum(map(len, prompts)) - 3 * 24
+
+    def test_offload_tier_round_trip_stays_exact(self, served, rng):
+        """A pool too small to keep cold prefixes resident offloads them to
+        host RAM and pages them back in on the next hit — output identical
+        to dense, with the paged-out/in counters moving."""
+        cfg, params = served
+        p1 = rng.integers(0, cfg.vocab, size=20).astype(np.int32)
+        p2 = rng.integers(0, cfg.vocab, size=20).astype(np.int32)
+        prompts = [p1, p2, p1]          # p1's prefix must survive p2
+        dense, _, _ = _run(cfg, params, prompts, slots=1, max_len=32,
+                           max_new=4)
+        # 3 allocatable pages; each request reserves ceil(23/8) = 3, so p2's
+        # admission must evict p1's 2 index pages into the host tier, and
+        # re-admitting p1 pages them back in (evicting p2's in turn)
+        paged = PagedKVConfig(page_size=8, n_pages=4, host_offload_pages=8)
+        got, _, eng = _run(cfg, params, prompts, slots=1, max_len=32,
+                           max_new=4, paged_kv=paged)
+        assert got == dense
+        assert eng.pager.pages_paged_out >= 2
+        assert eng.pager.pages_paged_in >= 2
+
+    def test_out_of_pages_drains_fcfs(self, served, rng):
+        """A pool that fits one request at a time: later requests wait for
+        pages (never rejected) and the queue drains FCFS."""
+        cfg, params = served
+        prompts = _prompts(cfg, rng, (19, 21, 23))
+        dense, _, _ = _run(cfg, params, prompts, slots=3, max_len=32,
+                           max_new=4)
+        # 4 allocatable pages: enough for the largest request alone
+        # (23 + 3 positions → 4 pages), never for two at once
+        paged = PagedKVConfig(page_size=8, n_pages=5, prefix_sharing=False)
+        got, stats, _ = _run(cfg, params, prompts, slots=3, max_len=32,
+                             max_new=4, paged_kv=paged)
+        assert got == dense
+        assert stats.completed == 3 and stats.rejected == 0
+
+
+# --------------------------------------------------------------------------
+# Observability: page-pool and prefix gauges ride the existing on_tick sync
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+class TestPagedObs:
+    def test_gauges_and_counters_exported(self, served, rng):
+        from repro.obs import ObsConfig
+
+        cfg, params = served
+        shared = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+        prompts = [
+            np.concatenate([shared,
+                            rng.integers(0, cfg.vocab, size=4).astype(np.int32)])
+            for _ in range(3)
+        ]
+        _, _, eng = _run(cfg, params, prompts, slots=1,
+                         paged_kv=PagedKVConfig(page_size=8),
+                         obs=ObsConfig(trace=False))
+        obs = eng.obs
+        assert obs.g_pages_total.value == eng.pager.total_pages
+        assert obs.g_pages_free.value == eng.pager.free_pages
+        assert obs.c_prefix_hit_tok.value == eng.prefix_hit_tokens > 0
+        assert obs.c_prefix_hit_req.value == eng.prefix_hit_requests == 2
+        assert "pages=" in obs.stats_line()
+        assert "prefix_hit=" in obs.stats_line()
